@@ -1,0 +1,108 @@
+"""Roofline report: aggregates the dry-run JSONs under experiments/dryrun
+into the EXPERIMENTS.md §Roofline table (deliverable g).
+
+Run ``PYTHONPATH=src python -m repro.launch.dryrun --all`` first (a separate
+process, because it forces 512 placeholder devices); this module only reads
+the recorded artifacts.  If none exist it prints a pointer instead of
+failing, so ``benchmarks.run`` stays green on a fresh checkout.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import banner, save, table
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_OUT", "experiments/dryrun")
+
+
+def load_rows(tag: str = "singlepod"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*_{tag}.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        rows.append(r)
+    return rows
+
+
+def fmt(rows):
+    out = []
+    for r in rows:
+        if "error" in r:
+            out.append({"arch": r["arch"], "shape": r["shape"],
+                        "bottleneck": f"ERROR {r['error'][:40]}"})
+            continue
+        if "skipped" in r:
+            out.append({"arch": r["arch"], "shape": r["shape"],
+                        "bottleneck": f"skip: {r['skipped'][:44]}"})
+            continue
+        out.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "t_compute_ms": round(r["t_compute"] * 1e3, 2),
+            "t_memory_ms": round(r["t_memory"] * 1e3, 2),
+            "t_coll_ms": round(r["t_collective"] * 1e3, 2),
+            "bottleneck": r["bottleneck"],
+            "useful_ratio": round(r["useful_flops_ratio"], 3),
+            "mfu_bound": round(r["mfu_bound"], 3),
+            "mem_GiB": round(r["peak_memory_per_device"] / 2 ** 30, 2),
+        })
+    return out
+
+
+def perf_variants():
+    """§Perf variant artifacts (tagged dry-runs) vs their baselines."""
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        tail = os.path.basename(path).rsplit("_", 1)[-1]
+        if not (tail.startswith("singlepod-") or tail.startswith("multipod-")):
+            continue                        # baselines, not variants
+        with open(path) as f:
+            r = json.load(f)
+        if "error" in r or "skipped" in r:
+            continue
+        variant = tail.replace(".json", "")
+        base_path = path.replace("_" + tail,
+                                 "_" + tail.split("-")[0] + ".json")
+        row = {"arch": r["arch"], "shape": r["shape"], "variant": variant,
+               "t_compute_ms": round(r["t_compute"] * 1e3, 2),
+               "t_memory_ms": round(r["t_memory"] * 1e3, 1),
+               "t_coll_ms": round(r["t_collective"] * 1e3, 2),
+               "bottleneck": r["bottleneck"]}
+        if os.path.exists(base_path):
+            with open(base_path) as f:
+                b = json.load(f)
+            dom = b["bottleneck"]
+            key = {"compute": "t_compute", "memory": "t_memory",
+                   "collective": "t_collective"}[dom]
+            if r[key] > 0:
+                row["dom_term_speedup"] = round(b[key] / r[key], 1)
+        rows.append(row)
+    if rows:
+        banner(f"§Perf variants ({len(rows)})")
+        table(rows, ["arch", "shape", "variant", "t_compute_ms",
+                     "t_memory_ms", "t_coll_ms", "bottleneck",
+                     "dom_term_speedup"])
+        save("roofline_perf_variants", {"rows": rows})
+
+
+def main():
+    for tag in ("singlepod", "multipod"):
+        rows = load_rows(tag)
+        if not rows:
+            print(f"[roofline] no {tag} dry-run artifacts under {DRYRUN_DIR};"
+                  " run: PYTHONPATH=src python -m repro.launch.dryrun --all"
+                  + (" --multi-pod" if tag == "multipod" else ""))
+            continue
+        frows = fmt(rows)
+        banner(f"Roofline — {tag} ({len(rows)} combos)")
+        table(frows, ["arch", "shape", "t_compute_ms", "t_memory_ms",
+                      "t_coll_ms", "bottleneck", "useful_ratio", "mfu_bound",
+                      "mem_GiB"])
+        save(f"roofline_{tag}", {"rows": rows})
+    perf_variants()
+    return True
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark driver: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Order matters for runtime: the analytic tables run in seconds, the
+convergence benchmarks train the paper's CNNs for real on CPU.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import fig6_async_order, fig45_convergence, fig78_aux_arch, \
+    roofline_report, table2_comm_storage, table5_tradeoff, table34_aux_params
+
+SUITES = [
+    ("table2_comm_storage", table2_comm_storage.main),
+    ("table34_aux_params", table34_aux_params.main),
+    ("fig45_convergence", fig45_convergence.main),
+    ("fig6_async_order", fig6_async_order.main),
+    ("fig78_aux_arch", fig78_aux_arch.main),
+    ("table5_tradeoff", table5_tradeoff.main),
+    ("roofline_report", roofline_report.main),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    failures = []
+    for name, fn in SUITES:
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+            print(f"\n[{name}] OK in {time.time() - t0:.1f}s")
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+            print(f"\n[{name}] FAILED after {time.time() - t0:.1f}s")
+    print(f"\n{'=' * 72}\nbenchmarks: {len(SUITES) - len(failures)}/"
+          f"{len(SUITES)} OK" + (f"; failed: {failures}" if failures else ""))
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

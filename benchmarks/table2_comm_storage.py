@@ -1,0 +1,76 @@
+"""Paper Table II: analytic communication & storage per global epoch.
+
+Evaluates the closed-form Table II cost model with the *actual* byte sizes
+of our CIFAR-10 CNN (the paper's experiment model) and of one transformer
+arch per family, across h in {1, 5, 10, 25, 50}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import banner, save, table
+from repro.common import bytes_of
+from repro.configs.registry import get_config
+from repro.core.accounting import CostModel, comm_one_epoch, server_storage, \
+    total_storage
+from repro.core.bundle import cnn_bundle, transformer_bundle
+from repro.models.cnn import CIFAR10
+
+METHODS = ("fsl_mc", "fsl_oc", "fsl_an", "cse_fsl")
+HS = (1, 5, 10, 25, 50)
+
+
+def cost_model_for(bundle, n: int, d_local: int, seq: int = 1) -> CostModel:
+    params_abs = jax.eval_shape(bundle.init,
+                                jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return CostModel(
+        n=n, q=bundle.smashed_bytes_per_sample * seq, d_local=d_local,
+        w_client=bytes_of(params_abs["client"]),
+        w_server=bytes_of(params_abs["server"]),
+        aux=bytes_of(params_abs["aux"]))
+
+
+def run_for(name: str, cm: CostModel):
+    rows = []
+    for method in METHODS:
+        hs = HS if method == "cse_fsl" else (1,)
+        for h in hs:
+            c = comm_one_epoch(cm, method, h=h)
+            rows.append({
+                "method": method if method != "cse_fsl" else f"cse_fsl_h{h}",
+                "uplink_MiB": round(c["uplink_smashed"] / 2 ** 20, 2),
+                "downlink_MiB": round(c["downlink_grads"] / 2 ** 20, 2),
+                "model_sync_MiB": round(c["model_sync"] / 2 ** 20, 2),
+                "total_MiB": round(c["total"] / 2 ** 20, 2),
+                "server_storage_MiB": round(server_storage(cm, method) / 2 ** 20, 3),
+                "total_storage_MiB": round(total_storage(cm, method) / 2 ** 20, 3),
+            })
+    banner(f"Table II — {name} (n={cm.n}, |D_i|={cm.d_local}, q={cm.q}B)")
+    table(rows, ["method", "uplink_MiB", "downlink_MiB", "model_sync_MiB",
+                 "total_MiB", "server_storage_MiB", "total_storage_MiB"])
+    return rows
+
+
+def main():
+    out = {}
+    # the paper's CIFAR-10 CNN: 5 clients, 10k samples each
+    cm = cost_model_for(cnn_bundle(CIFAR10), n=5, d_local=10_000)
+    out["cifar10_cnn"] = run_for("cifar10_cnn (paper setup)", cm)
+    # paper-claim check: CSE h uplink == AN uplink / h
+    an = comm_one_epoch(cm, "fsl_an")
+    for h in HS:
+        cse = comm_one_epoch(cm, "cse_fsl", h=h)
+        assert cse["uplink_smashed"] == an["uplink_smashed"] // h
+    # a transformer arch per family (seq 512 tokens/sample)
+    for arch in ("qwen3-0.6b", "olmoe-1b-7b", "falcon-mamba-7b"):
+        cfg = get_config(arch)
+        cmx = cost_model_for(transformer_bundle(cfg), n=8, d_local=2_000,
+                             seq=512)
+        out[arch] = run_for(arch, cmx)
+    save("table2_comm_storage", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

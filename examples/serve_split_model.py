@@ -1,0 +1,76 @@
+"""Serving example: batched prefill + greedy decode through the split model.
+
+After CSE-FSL training the deployed network is the merged (client stage +
+server stage) model; this example serves it with a KV/SSM cache through the
+same ``prefill`` / ``decode_step`` code paths the decode dry-run shapes use,
+for one dense and one attention-free (Mamba) architecture.
+
+  PYTHONPATH=src python examples/serve_split_model.py \
+      [--arch qwen3-0.6b] [--batch 4] [--prompt-len 32] [--gen 16]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.models.model import decode_step, init_params, prefill
+
+
+def serve(arch: str, batch: int, prompt_len: int, gen: int):
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                       (batch, prompt_len), dtype=np.int32))
+    inputs = {"tokens": prompts}
+    if cfg.family == "vlm":
+        inputs["image_embeds"] = jnp.zeros(
+            (batch, cfg.num_image_tokens, cfg.d_model), jnp.float32)
+
+    prefill_fn = jax.jit(lambda p, i: prefill(cfg, p, i,
+                                              cache_len=prompt_len + gen))
+    decode_fn = jax.jit(lambda p, t, pos, c: decode_step(cfg, p, t, pos, c),
+                        donate_argnums=(3,))
+
+    t0 = time.time()
+    logits, caches = prefill_fn(params, inputs)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for step in range(gen - 1):
+        logits, caches = decode_fn(params, tok,
+                                   jnp.asarray(prompt_len + step, jnp.int32),
+                                   caches)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    toks = jnp.stack(out, 1)
+    print(f"[{arch}] prefill {batch}x{prompt_len} in {t_prefill:.2f}s; "
+          f"decoded {gen} tokens in {t_decode:.2f}s "
+          f"({batch * gen / max(t_decode, 1e-9):.1f} tok/s)")
+    print(f"  first sequence: {np.asarray(toks[0])[:12]} ...")
+    assert toks.shape == (batch, gen)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else ["qwen3-0.6b", "falcon-mamba-7b"]
+    for arch in archs:
+        serve(arch, args.batch, args.prompt_len, args.gen)
+
+
+if __name__ == "__main__":
+    main()

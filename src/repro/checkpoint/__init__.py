@@ -1,0 +1,53 @@
+"""Checkpointing: pytree <-> .npz with a JSON manifest (no orbax offline)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or arr.dtype.name == "bfloat16":
+            # npz cannot store ml_dtypes; widen losslessly (cast back on
+            # restore via the template's dtype)
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+def save(path: str, tree, step: int = 0, extra: Dict[str, Any] | None = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    manifest = {"step": int(step), "keys": sorted(flat),
+                "extra": extra or {}}
+    with open(path.removesuffix(".npz") + ".json", "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore(path: str, like):
+    """Restore into the structure of ``like`` (a pytree template)."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in flat_like:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        arr = npz[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def manifest(path: str) -> Dict[str, Any]:
+    with open(path.removesuffix(".npz") + ".json") as f:
+        return json.load(f)

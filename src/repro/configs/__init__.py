@@ -1,0 +1,1 @@
+from repro.configs.base import FSLConfig, ModelConfig, ShapeConfig, SHAPES, shape_config  # noqa: F401

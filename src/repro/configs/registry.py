@@ -1,0 +1,32 @@
+"""Registry of the 10 assigned architectures (+ the paper's CNN configs).
+
+Every entry cites its source; the exact dimensions come from the assignment
+table.  ``get_config(name)`` returns the full-size ModelConfig;
+``get_config(name).reduced()`` is the CPU smoke variant.
+"""
+from __future__ import annotations
+
+from repro.configs import zamba2_7b, olmoe_1b_7b, qwen3_0_6b, qwen2_72b, \
+    qwen2_vl_72b, falcon_mamba_7b, qwen2_1_5b, glm4_9b, phi35_moe, \
+    hubert_xlarge
+
+ARCHS = {
+    "zamba2-7b": zamba2_7b.CONFIG,
+    "olmoe-1b-7b": olmoe_1b_7b.CONFIG,
+    "qwen3-0.6b": qwen3_0_6b.CONFIG,
+    "qwen2-72b": qwen2_72b.CONFIG,
+    "qwen2-vl-72b": qwen2_vl_72b.CONFIG,
+    "falcon-mamba-7b": falcon_mamba_7b.CONFIG,
+    "qwen2-1.5b": qwen2_1_5b.CONFIG,
+    "glm4-9b": glm4_9b.CONFIG,
+    "phi3.5-moe-42b-a6.6b": phi35_moe.CONFIG,
+    "hubert-xlarge": hubert_xlarge.CONFIG,
+}
+
+
+def get_config(name: str):
+    return ARCHS[name]
+
+
+def arch_names():
+    return list(ARCHS)

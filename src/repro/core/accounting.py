@@ -1,0 +1,130 @@
+"""Communication & storage accounting (paper Table II + §VI-D/E).
+
+Analytic formulas for one *global epoch* (every client sees its full local
+dataset once), matching Table II exactly, plus incremental meters the
+trainer can drive to report *measured* bytes.
+
+Notation (paper Table I): n clients, q bytes of smashed data per sample,
+|D| samples per client per epoch, |w| client-side model bytes, |a| auxiliary
+net bytes, h upload period, alpha the client-side fraction (the model
+up/download term `2 n alpha |w|` is the client-side slice of the full model,
+which here IS |w|, so we take alpha|w| = w_bytes directly).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+# ---------------------------------------------------------------------------
+# Analytic Table II
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    n: int                  # clients
+    q: int                  # smashed bytes per sample
+    d_local: int            # |D_i|: samples per client per epoch
+    w_client: int           # client-side model bytes (alpha * |w|)
+    w_server: int           # server-side model bytes
+    aux: int                # auxiliary net bytes
+    label_bytes: int = 4
+
+
+def comm_one_epoch(cm: CostModel, method: str, h: int = 1) -> Dict[str, int]:
+    """Bytes communicated in one global epoch (Table II columns 1-3)."""
+    smashed_up = cm.n * cm.q * cm.d_local
+    labels_up = cm.n * cm.label_bytes * cm.d_local
+    model_sync_mc = 2 * cm.n * cm.w_client
+    model_sync_an = 2 * cm.n * (cm.w_client + cm.aux)
+    if method == "fsl_mc" or method == "fsl_oc":
+        # per-batch smashed up + per-batch gradient down (same size as q|D|)
+        return {"uplink_smashed": smashed_up,
+                "uplink_labels": labels_up,
+                "downlink_grads": smashed_up,
+                "model_sync": model_sync_mc,
+                "total": 2 * smashed_up + labels_up + model_sync_mc}
+    if method == "fsl_an":
+        return {"uplink_smashed": smashed_up,
+                "uplink_labels": labels_up,
+                "downlink_grads": 0,
+                "model_sync": model_sync_an,
+                "total": smashed_up + labels_up + model_sync_an}
+    if method == "cse_fsl":
+        return {"uplink_smashed": smashed_up // h,
+                "uplink_labels": labels_up // h,
+                "downlink_grads": 0,
+                "model_sync": model_sync_an,
+                "total": smashed_up // h + labels_up // h + model_sync_an}
+    raise ValueError(method)
+
+
+def server_storage(cm: CostModel, method: str) -> int:
+    """Server-side persistent model storage (Table II last column)."""
+    if method == "fsl_mc":
+        return cm.n * cm.w_server
+    if method == "fsl_oc":
+        return cm.w_server
+    if method == "fsl_an":
+        return cm.n * (cm.w_server + cm.aux)
+    if method == "cse_fsl":
+        return cm.w_server + cm.aux
+    raise ValueError(method)
+
+
+def total_storage(cm: CostModel, method: str) -> int:
+    """§VI-E: aggregation-time storage = server models + n client models
+    (+ aux nets where applicable)."""
+    agg = cm.n * cm.w_client
+    if method in ("fsl_an", "cse_fsl"):
+        agg += cm.n * cm.aux
+    return agg + server_storage(cm, method)
+
+
+# ---------------------------------------------------------------------------
+# Runtime meter
+# ---------------------------------------------------------------------------
+
+
+class CommMeter:
+    """Incremental byte counters driven by the trainer loop."""
+
+    def __init__(self):
+        self.counts: Dict[str, int] = {
+            "uplink_smashed": 0, "uplink_labels": 0, "downlink_grads": 0,
+            "model_sync": 0}
+
+    def log(self, kind: str, nbytes: int):
+        self.counts[kind] += int(nbytes)
+
+    @property
+    def total(self) -> int:
+        return sum(self.counts.values())
+
+    def as_dict(self) -> Dict[str, int]:
+        return {**self.counts, "total": self.total}
+
+
+def meter_round(meter: CommMeter, cm: CostModel, method: str, h: int,
+                batch_size: int, smashed_bytes_per_sample: int | None = None):
+    """Account one CSE-FSL/baseline round (h batches) of traffic."""
+    q = smashed_bytes_per_sample or cm.q
+    if method in ("fsl_mc", "fsl_oc"):
+        for _ in range(h):      # these methods upload every batch
+            meter.log("uplink_smashed", q * batch_size)
+            meter.log("uplink_labels", cm.label_bytes * batch_size)
+            meter.log("downlink_grads", q * batch_size)
+        return
+    if method == "fsl_an":
+        for _ in range(h):
+            meter.log("uplink_smashed", q * batch_size)
+            meter.log("uplink_labels", cm.label_bytes * batch_size)
+        return
+    # cse_fsl: once per h batches
+    meter.log("uplink_smashed", q * batch_size)
+    meter.log("uplink_labels", cm.label_bytes * batch_size)
+
+
+def meter_aggregation(meter: CommMeter, cm: CostModel, method: str):
+    per_client = cm.w_client + (cm.aux if method in ("fsl_an", "cse_fsl") else 0)
+    meter.log("model_sync", 2 * cm.n * per_client)

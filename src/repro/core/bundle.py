@@ -1,0 +1,103 @@
+"""SplitModelBundle: the uniform interface the FSL protocols operate on.
+
+The protocol layer (``repro.core.protocol`` / ``baselines``) is generic over
+model families — transformers (all 10 assigned archs) and the paper's CNNs —
+through this small bundle of pure functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import cnn as cnn_mod
+from repro.models import model as tf_mod
+from repro.models.blocks import Ctx
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitModelBundle:
+    """All functions take/return explicit param pytrees.
+
+    params layout: {"client": ..., "aux": ..., "server": ...}
+    ``inputs`` is a pytree (dict for transformers, array for CNNs);
+    ``labels`` an int array.
+    """
+    name: str
+    init: Callable[[Any], Dict[str, Any]]
+    client_loss: Callable[..., Any]       # (cp, ap, inputs, labels) -> (loss, smashed)
+    server_loss: Callable[..., Any]       # (sp, smashed, labels) -> loss
+    client_smashed: Callable[..., Any]    # (cp, inputs) -> smashed
+    e2e_loss: Callable[..., Any]          # (cp, sp, inputs, labels) -> loss
+    smashed_bytes_per_sample: int = 0     # q in Table II (at model dtype)
+    label_bytes_per_sample: int = 4
+
+
+def transformer_bundle(cfg: ModelConfig) -> SplitModelBundle:
+    ctx = Ctx(cfg, "train", window=cfg.swa_window)
+
+    def client_loss(cp, ap, inputs, labels):
+        return tf_mod.client_loss(cfg, cp, ap, inputs, labels, ctx)
+
+    def server_loss(sp, smashed, labels):
+        return tf_mod.server_loss(cfg, sp, smashed, labels, ctx)
+
+    def client_smashed(cp, inputs):
+        smashed, _, _ = tf_mod.client_forward(cfg, cp, inputs, ctx)
+        return smashed
+
+    def e2e_loss(cp, sp, inputs, labels):
+        smashed, aux1, _ = tf_mod.client_forward(cfg, cp, inputs, ctx)
+        x, aux2, _ = tf_mod.server_forward(cfg, sp, smashed, ctx)
+        loss = tf_mod.chunked_ce(x, tf_mod.server_logits_fn(cfg, sp), labels)
+        return loss + tf_mod.MOE_AUX_COEF * (aux1 + aux2)
+
+    import numpy as np
+    from repro.common import dtype_of
+    itemsize = np.dtype(dtype_of(cfg.dtype)).itemsize
+    # q: one token's cut-layer activation
+    q = cfg.d_model * itemsize
+
+    return SplitModelBundle(
+        name=cfg.name,
+        init=lambda key: tf_mod.init_params(cfg, key),
+        client_loss=client_loss,
+        server_loss=server_loss,
+        client_smashed=client_smashed,
+        e2e_loss=e2e_loss,
+        smashed_bytes_per_sample=q,
+    )
+
+
+def cnn_bundle(cfg: cnn_mod.CNNConfig) -> SplitModelBundle:
+    from repro.models.layers import cross_entropy
+
+    def client_loss(cp, ap, inputs, labels):
+        smashed = cnn_mod.client_forward(cfg, cp, inputs)
+        logits = cnn_mod.aux_forward(cfg, ap, smashed)
+        return cross_entropy(logits, labels), smashed
+
+    def server_loss(sp, smashed, labels):
+        logits = cnn_mod.server_forward(cfg, sp, smashed)
+        return cross_entropy(logits, labels)
+
+    def client_smashed(cp, inputs):
+        return cnn_mod.client_forward(cfg, cp, inputs)
+
+    def e2e_loss(cp, sp, inputs, labels):
+        smashed = cnn_mod.client_forward(cfg, cp, inputs)
+        logits = cnn_mod.server_forward(cfg, sp, smashed)
+        return cross_entropy(logits, labels)
+
+    return SplitModelBundle(
+        name=cfg.name,
+        init=lambda key: cnn_mod.init_params(cfg, key),
+        client_loss=client_loss,
+        server_loss=server_loss,
+        client_smashed=client_smashed,
+        e2e_loss=e2e_loss,
+        smashed_bytes_per_sample=cfg.smashed_size * 4,
+    )

@@ -1,0 +1,216 @@
+"""Fused linear + cross-entropy Pallas-TPU kernel (vocab-tiled online LSE).
+
+The LM-head loss over huge vocabularies (152k for the qwen archs) is the
+memory hot spot of both the auxiliary-head and the server-head updates: the
+naive path materializes [T, V] logits in HBM (T=BS tokens).  This kernel
+computes ``mean_ce(x @ w, labels)`` without ever materializing the logits:
+each (token-block, vocab-block) grid step computes one [bt, bv] logit tile
+in VMEM on the MXU and folds it into running (max, sumexp, picked-logit)
+accumulators held in VMEM scratch across the minor vocab grid axis.
+
+Backward runs the same tiling twice (recomputing the logit tile from the
+saved row-wise LSE): once accumulating dx over the vocab axis, once
+accumulating dw over the token axis.
+
+Grid/BlockSpec conventions:
+  fwd  : grid (nt, nv), v minor — scratch (m, l, picked) persists per row.
+  bwd dx: grid (nt, nv), v minor — dx tile accumulates in scratch.
+  bwd dw: grid (nv, nt), t minor — dw tile accumulates in scratch.
+All matmul tiles are (bt, d) x (d, bv) with bt, bv multiples of 128 (MXU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(x_ref, w_ref, lab_ref, lse_ref, picked_ref,
+                m_scr, l_scr, p_scr, *, bv: int, t_real: int, v_real: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    nv = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        p_scr[...] = jnp.zeros_like(p_scr)
+
+    logits = jnp.dot(x_ref[...].astype(jnp.float32),
+                     w_ref[...].astype(jnp.float32),
+                     preferred_element_type=jnp.float32)          # [bt, bv]
+    col = lax.broadcasted_iota(jnp.int32, logits.shape, 1) + j * bv
+    logits = jnp.where(col < v_real, logits, NEG_INF)
+
+    m_prev = m_scr[...]                                           # [bt, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, -1, keepdims=True))
+    l_scr[...] = (l_scr[...] * jnp.exp(m_prev - m_new)
+                  + jnp.sum(jnp.exp(logits - m_new), -1, keepdims=True))
+    m_scr[...] = m_new
+
+    lab = lab_ref[...]                                            # [bt, 1]
+    hit = col == lab
+    p_scr[...] += jnp.sum(jnp.where(hit, logits, 0.0), -1, keepdims=True)
+
+    @pl.when(j == nv - 1)
+    def _emit():
+        lse_ref[...] = m_scr[...] + jnp.log(l_scr[...])
+        picked_ref[...] = p_scr[...]
+
+
+def fused_ce_fwd(x, w, labels, *, bt: int, bv: int, interpret: bool):
+    """Per-row (lse, picked) of x @ w.  x:[T,d] w:[d,V] labels:[T]."""
+    t, d = x.shape
+    v = w.shape[1]
+    tp = pl.cdiv(t, bt) * bt
+    vp = pl.cdiv(v, bv) * bv
+    if tp != t:
+        x = jnp.pad(x, ((0, tp - t), (0, 0)))
+        labels = jnp.pad(labels, (0, tp - t))
+    if vp != v:
+        w = jnp.pad(w, ((0, 0), (0, vp - v)))
+    nt, nv = tp // bt, vp // bv
+    lab2 = labels.astype(jnp.int32)[:, None]
+
+    lse, picked = pl.pallas_call(
+        functools.partial(_fwd_kernel, bv=bv, t_real=t, v_real=v),
+        grid=(nt, nv),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bv), lambda i, j: (0, j)),
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((tp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((tp, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bt, 1), jnp.float32),
+            pltpu.VMEM((bt, 1), jnp.float32),
+            pltpu.VMEM((bt, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w, lab2)
+    return lse[:t, 0], picked[:t, 0]
+
+
+# ---------------------------------------------------------------------------
+# Backward: dx (grid (nt, nv), accumulate over v)
+# ---------------------------------------------------------------------------
+
+
+def _p_tile(x_ref, w_ref, lab_ref, lse_ref, j, *, bv, t_real, v_real, t_off):
+    """Recompute the scaled probability tile P = (softmax - onehot)/T."""
+    logits = jnp.dot(x_ref[...].astype(jnp.float32),
+                     w_ref[...].astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    col = lax.broadcasted_iota(jnp.int32, logits.shape, 1) + j * bv
+    p = jnp.exp(logits - lse_ref[...])
+    p = p - (col == lab_ref[...]).astype(jnp.float32)
+    row = lax.broadcasted_iota(jnp.int32, logits.shape, 0) + t_off
+    valid = (col < v_real) & (row < t_real)
+    return jnp.where(valid, p, 0.0) / t_real
+
+
+def _dx_kernel(x_ref, w_ref, lab_ref, lse_ref, dx_ref, acc, *,
+               bt, bv, t_real, v_real):
+    i, j = pl.program_id(0), pl.program_id(1)
+    nv = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    p = _p_tile(x_ref, w_ref, lab_ref, lse_ref, j, bv=bv, t_real=t_real,
+                v_real=v_real, t_off=i * bt)
+    acc[...] += jnp.dot(p, w_ref[...].astype(jnp.float32).T,
+                        preferred_element_type=jnp.float32)
+
+    @pl.when(j == nv - 1)
+    def _emit():
+        dx_ref[...] = acc[...]
+
+
+def _dw_kernel(x_ref, w_ref, lab_ref, lse_ref, dw_ref, acc, *,
+               bt, bv, t_real, v_real):
+    j, i = pl.program_id(0), pl.program_id(1)
+    nt = pl.num_programs(1)
+
+    @pl.when(i == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    p = _p_tile(x_ref, w_ref, lab_ref, lse_ref, j, bv=bv, t_real=t_real,
+                v_real=v_real, t_off=i * bt)
+    acc[...] += jnp.dot(x_ref[...].astype(jnp.float32).T, p,
+                        preferred_element_type=jnp.float32)
+
+    @pl.when(i == nt - 1)
+    def _emit():
+        dw_ref[...] = acc[...]
+
+
+def fused_ce_bwd(x, w, labels, lse, *, bt: int, bv: int, interpret: bool):
+    """(dx, dw) of mean-CE, from saved per-row lse."""
+    t, d = x.shape
+    v = w.shape[1]
+    tp = pl.cdiv(t, bt) * bt
+    vp = pl.cdiv(v, bv) * bv
+    if tp != t:
+        x = jnp.pad(x, ((0, tp - t), (0, 0)))
+        labels = jnp.pad(labels, (0, tp - t))
+        lse = jnp.pad(lse, (0, tp - t))
+    if vp != v:
+        w = jnp.pad(w, ((0, 0), (0, vp - v)))
+    nt, nv = tp // bt, vp // bv
+    lab2 = labels.astype(jnp.int32)[:, None]
+    lse2 = lse[:, None]
+    common = dict(bt=bt, bv=bv, t_real=t, v_real=v)
+
+    dx = pl.pallas_call(
+        functools.partial(_dx_kernel, **common),
+        grid=(nt, nv),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bv), lambda i, j: (0, j)),
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tp, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bt, d), jnp.float32)],
+        interpret=interpret,
+    )(x, w, lab2, lse2)
+
+    dw = pl.pallas_call(
+        functools.partial(_dw_kernel, **common),
+        grid=(nv, nt),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda j, i: (i, 0)),
+            pl.BlockSpec((d, bv), lambda j, i: (0, j)),
+            pl.BlockSpec((bt, 1), lambda j, i: (i, 0)),
+            pl.BlockSpec((bt, 1), lambda j, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((d, bv), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((d, vp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((d, bv), jnp.float32)],
+        interpret=interpret,
+    )(x, w, lab2, lse2)
+
+    return dx[:t].astype(x.dtype), dw[:, :v].astype(w.dtype)

@@ -1,0 +1,126 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Each op auto-selects ``interpret=True`` off-TPU (this container is CPU-only;
+TPU is the compilation *target*), wires a ``custom_vjp`` so the ops are
+drop-in replacements inside training losses, and picks MXU-aligned block
+sizes from the problem shape.
+
+  - ``fused_ce``      : Pallas forward AND backward (both vocab-tiled).
+  - ``ssm_scan``      : Pallas forward; backward recomputes through the
+                        chunked associative-scan reference (O(chunk) memory).
+  - ``swa_attention`` : Pallas forward; backward recomputes through the
+                        reference (used on the serving path, grad rarely
+                        needed).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fused_ce as _ce
+from repro.kernels import ssm_scan as _ssm
+from repro.kernels import swa_attention as _swa
+from repro.kernels import ref as ref  # noqa: F401  (re-export for tests)
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _ce_blocks(t: int, d: int, v: int):
+    """Block sizes keeping x-tile + w-tile + scratch within ~8MB VMEM."""
+    bt = 128 if t >= 128 else max(8, t)
+    budget = 8 * 2 ** 20 // 4                 # fp32 words
+    bv = max(128, min(512, (budget - bt * d) // max(d, 1) // 128 * 128))
+    return bt, min(bv, max(128, v))
+
+
+# ---------------------------------------------------------------------------
+# fused_ce
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_ce(x, w, labels, block=None):
+    """Mean cross-entropy of ``x @ w`` vs labels.  x:[T,d] w:[d,V] lab:[T]."""
+    loss, _ = _fused_ce_fwd(x, w, labels, block)
+    return loss
+
+
+def _fused_ce_fwd(x, w, labels, block):
+    t, d = x.shape
+    bt, bv = block or _ce_blocks(t, d, w.shape[1])
+    lse, picked = _ce.fused_ce_fwd(x, w, labels, bt=bt, bv=bv,
+                                   interpret=_interpret())
+    loss = jnp.mean(lse - picked)
+    return loss, (x, w, labels, lse)
+
+
+def _fused_ce_bwd(block, res, g):
+    x, w, labels, lse = res
+    t, d = x.shape
+    bt, bv = block or _ce_blocks(t, d, w.shape[1])
+    dx, dw = _ce.fused_ce_bwd(x, w, labels, lse, bt=bt, bv=bv,
+                              interpret=_interpret())
+    return dx * g, dw * g, None
+
+
+fused_ce.defvjp(_fused_ce_fwd, _fused_ce_bwd)
+
+
+# ---------------------------------------------------------------------------
+# ssm_scan
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def ssm_scan(u, dt, a, b_mat, c_mat, d_vec, chunk: int = 128):
+    """Mamba-1 selective scan (see kernels/ssm_scan.py)."""
+    cs = chunk if u.shape[1] % chunk == 0 else u.shape[1]
+    return _ssm.ssm_scan(u, dt, a, b_mat, c_mat, d_vec, chunk=cs,
+                         interpret=_interpret())
+
+
+def _ssm_fwd(u, dt, a, b_mat, c_mat, d_vec, chunk):
+    return ssm_scan(u, dt, a, b_mat, c_mat, d_vec, chunk), \
+        (u, dt, a, b_mat, c_mat, d_vec)
+
+
+def _ssm_bwd(chunk, res, g):
+    from repro.models.layers import selective_scan
+    u, dt, a, b_mat, c_mat, d_vec = res
+    _, vjp = jax.vjp(
+        lambda *args: selective_scan(*args, chunk=chunk), u, dt, a, b_mat,
+        c_mat, d_vec)
+    return vjp(g)
+
+
+ssm_scan.defvjp(_ssm_fwd, _ssm_bwd)
+
+
+# ---------------------------------------------------------------------------
+# swa_attention
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def swa_attention(q, k, v, window: int):
+    """Sliding-window causal flash attention (see kernels/swa_attention.py)."""
+    return _swa.swa_attention(q, k, v, window=window, interpret=_interpret())
+
+
+def _swa_fwd(q, k, v, window):
+    return swa_attention(q, k, v, window), (q, k, v)
+
+
+def _swa_bwd(window, res, g):
+    from repro.kernels.ref import swa_attention as ref_swa
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: ref_swa(q_, k_, v_, window=window),
+                     q, k, v)
+    return vjp(g)
+
+
+swa_attention.defvjp(_swa_fwd, _swa_bwd)

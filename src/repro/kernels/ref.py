@@ -1,0 +1,100 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernel tests ``assert_allclose`` against, and
+the backward implementations the ops-level ``custom_vjp`` wrappers fall back
+to (recompute-from-residuals).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Fused linear + cross entropy (the aux / server LM-head hot spot)
+# ---------------------------------------------------------------------------
+
+
+def fused_ce(x, w, labels):
+    """Mean CE of softmax(x @ w) against labels.
+
+    x: [T, d]; w: [d, V]; labels: [T] int32 -> scalar fp32.
+    """
+    logits = (x.astype(jnp.float32) @ w.astype(jnp.float32))
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - picked)
+
+
+def fused_ce_grads(x, w, labels, g=1.0):
+    """(dx, dw) of ``g * fused_ce``."""
+    t = x.shape[0]
+    logits = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = p - jax.nn.one_hot(labels, w.shape[1], dtype=jnp.float32)
+    p = p * (g / t)
+    dx = (p @ w.astype(jnp.float32).T).astype(x.dtype)
+    dw = (x.astype(jnp.float32).T @ p).astype(w.dtype)
+    return dx, dw
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 selective scan
+# ---------------------------------------------------------------------------
+
+
+def ssm_scan(u, dt, a, b_mat, c_mat, d_vec):
+    """Sequential-in-time reference of the Mamba-1 recurrence.
+
+    u, dt: [B,S,D]; a: [D,N]; b_mat, c_mat: [B,S,N]; d_vec: [D] -> y [B,S,D].
+    h_t = exp(dt_t a) h_{t-1} + dt_t b_t u_t ;  y_t = c_t . h_t + d u_t.
+    """
+    bsz, s, d = u.shape
+    n = a.shape[-1]
+    dtf = dt.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+    da = jnp.exp(dtf[..., None] * a)                               # [B,S,D,N]
+    db = dtf[..., None] * b_mat[:, :, None, :].astype(jnp.float32) * uf[..., None]
+
+    def step(h, inp):
+        da_t, db_t, c_t = inp
+        h = da_t * h + db_t                                        # [B,D,N]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((bsz, d, n), jnp.float32)
+    _, ys = jax.lax.scan(step, h0,
+                         (da.transpose(1, 0, 2, 3), db.transpose(1, 0, 2, 3),
+                          c_mat.transpose(1, 0, 2).astype(jnp.float32)))
+    y = ys.transpose(1, 0, 2) + uf * d_vec
+    return y.astype(u.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Sliding-window flash attention (forward)
+# ---------------------------------------------------------------------------
+
+
+def swa_attention(q, k, v, *, window: int, causal: bool = True):
+    """Materialized-scores reference.  q: [B,S,H,hd]; k,v: [B,S,KH,hd]."""
+    b, s, h, hd = q.shape
+    kh = k.shape[2]
+    rep = h // kh
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= kp > qp - window
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    wts = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", wts, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,78 @@
+"""Mamba-1 selective-scan Pallas-TPU kernel (falcon-mamba's hot loop).
+
+TPU adaptation of the CUDA selective-scan: instead of one thread-block per
+(batch, channel-slab) with warp-level time iteration, we tile channels into
+VPU-lane-aligned blocks of ``bd`` and keep the running state h [bd, N] in
+VMEM scratch while a ``fori_loop`` walks time *within* a sequence chunk; the
+minor grid axis walks chunks so the state carries across the whole sequence
+without ever leaving VMEM.  HBM traffic is exactly one read of (u, dt, B, C)
+and one write of y — the recurrence itself never touches HBM, which is the
+paper-relevant property (the GPU version's shared-memory residency).
+
+Grid: (batch, d_blocks, seq_chunks), seq minor.
+Blocks: u/dt/y [1, cs, bd]; b/c [1, cs, N]; a [bd, N]; d_skip [bd].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(u_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, h_scr,
+                 *, cs: int):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    a = a_ref[...]                                   # [bd, N] fp32
+    d_skip = d_ref[...]                              # [1, bd]
+
+    def step(t, h):
+        u_t = u_ref[0, t, :].astype(jnp.float32)     # [bd]
+        dt_t = dt_ref[0, t, :].astype(jnp.float32)   # [bd]
+        b_t = b_ref[0, t, :].astype(jnp.float32)     # [N]
+        c_t = c_ref[0, t, :].astype(jnp.float32)     # [N]
+        da = jnp.exp(dt_t[:, None] * a)              # [bd, N]
+        h = da * h + (dt_t * u_t)[:, None] * b_t[None, :]
+        y_t = jnp.sum(h * c_t[None, :], axis=-1) + d_skip[0] * u_t
+        y_ref[0, t, :] = y_t.astype(y_ref.dtype)
+        return h
+
+    h_scr[...] = lax.fori_loop(0, cs, step, h_scr[...])
+
+
+def ssm_scan(u, dt, a, b_mat, c_mat, d_vec, *, bd: int = 128,
+             chunk: int = 128, interpret: bool = True):
+    """u, dt: [B,S,D]; a: [D,N]; b_mat, c_mat: [B,S,N]; d_vec: [D] -> [B,S,D]."""
+    bsz, s, d = u.shape
+    n = a.shape[-1]
+    bd = min(bd, d)
+    assert d % bd == 0, (d, bd)
+    cs = min(chunk, s)
+    assert s % cs == 0, (s, cs)
+    nd, ns = d // bd, s // cs
+    d2 = d_vec.astype(jnp.float32)[None, :]          # [1, D]
+
+    return pl.pallas_call(
+        functools.partial(_scan_kernel, cs=cs),
+        grid=(bsz, nd, ns),
+        in_specs=[
+            pl.BlockSpec((1, cs, bd), lambda b, i, s_: (b, s_, i)),   # u
+            pl.BlockSpec((1, cs, bd), lambda b, i, s_: (b, s_, i)),   # dt
+            pl.BlockSpec((bd, n), lambda b, i, s_: (i, 0)),           # a
+            pl.BlockSpec((1, cs, n), lambda b, i, s_: (b, s_, 0)),    # B
+            pl.BlockSpec((1, cs, n), lambda b, i, s_: (b, s_, 0)),    # C
+            pl.BlockSpec((1, bd), lambda b, i, s_: (0, i)),           # d_skip
+        ],
+        out_specs=pl.BlockSpec((1, cs, bd), lambda b, i, s_: (b, s_, i)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, d), u.dtype),
+        scratch_shapes=[pltpu.VMEM((bd, n), jnp.float32)],
+        interpret=interpret,
+    )(u, dt, a.astype(jnp.float32), b_mat, c_mat, d2)

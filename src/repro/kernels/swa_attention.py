@@ -1,0 +1,113 @@
+"""Sliding-window flash attention (forward) Pallas-TPU kernel.
+
+The sub-quadratic attention path for dense archs at the ``long_500k`` shape
+(DESIGN §Skips): causal attention restricted to a trailing window of W
+positions.  Classic flash-attention online-softmax tiling, with the kv loop
+*statically* truncated to the ``ceil(W/bk)+1`` kv blocks that can intersect
+the window of a given q block — work is O(S·W), not O(S²).
+
+GQA is handled in the index maps: the grid's head axis walks *q* heads and
+the k/v BlockSpecs map head ``h`` to kv head ``h // (H/KH)``; kv tensors are
+never repeated in HBM.
+
+Grid: (B, H, nq, nwin), window-block axis minor.
+Blocks: q/o [1, 1, bq, hd]; k/v [1, 1, bk, hd] at a q-dependent offset.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _swa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                *, bq: int, bk: int, nwin: int, window: int, scale: float):
+    iq = pl.program_id(2)
+    jw = pl.program_id(3)
+
+    @pl.when(jw == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # absolute kv block start for this (iq, jw): the window of q block iq
+    # spans kv blocks [iq - nwin + 1, iq]; index maps clamp to 0, the
+    # position mask below (computed from the *unclamped* start) zeroes any
+    # out-of-range contribution.
+    start = (iq - (nwin - 1) + jw) * bk
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale                 # [bq, hd]
+    k = k_ref[0, 0].astype(jnp.float32)                         # [bk, hd]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)     # [bq, bk]
+
+    qp = lax.broadcasted_iota(jnp.int32, s.shape, 0) + iq * bq
+    kp = lax.broadcasted_iota(jnp.int32, s.shape, 1) + start
+    mask = (kp <= qp) & (kp > qp - window) & (kp >= 0)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                         # [bq, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, -1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v_ref[0, 0].astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(jw == nwin - 1)
+    def _emit():
+        o_ref[0, 0] = (acc_scr[...] / (l_scr[...] + 1e-30)).astype(o_ref.dtype)
+
+
+def swa_attention(q, k, v, *, window: int, bq: int = 128, bk: int = 128,
+                  interpret: bool = True):
+    """q: [B,S,H,hd]; k,v: [B,S,KH,hd]; causal sliding-window attention."""
+    b, s, h, hd = q.shape
+    kh = k.shape[2]
+    rep = h // kh
+    bq = min(bq, s)
+    bk = min(bk, s)
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    nq = s // bq
+    nwin = pl.cdiv(window, bk) + 1
+    nwin = min(nwin, s // bk)
+    scale = 1.0 / math.sqrt(hd)
+
+    # [B,S,H,hd] -> [B,H,S,hd] so the head axis is a clean grid dim
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    def kv_idx(bi, hi, iq, jw):
+        blk = iq - (nwin - 1) + jw
+        return (bi, hi // rep, jnp.maximum(blk, 0), 0)
+
+    out = pl.pallas_call(
+        functools.partial(_swa_kernel, bq=bq, bk=bk, nwin=nwin,
+                          window=window, scale=scale),
+        grid=(b, h, nq, nwin),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda bi, hi, iq, jw: (bi, hi, iq, 0)),
+            pl.BlockSpec((1, 1, bk, hd), kv_idx),
+            pl.BlockSpec((1, 1, bk, hd), kv_idx),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda bi, hi, iq, jw: (bi, hi, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,468 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e constants from
+``launch.mesh``):
+
+  compute    = HLO_FLOPs_per_device            / peak_FLOP/s
+  memory     = HLO_bytes_per_device            / HBM_bw
+  collective = collective_bytes_per_device     / link_bw
+
+``compiled.cost_analysis()`` reports the *per-device* (SPMD-partitioned)
+module, so dividing by per-chip peaks directly equals the spec's
+``global / (chips x peak)`` form.  collective bytes are not in
+cost_analysis: we parse the optimized HLO and sum operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any, Dict, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\(?[a-z0-9]+\[[^=]*?)\s"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([^\s(]+)\s*(?:\(.*)?\{\s*$")
+_WHILE_RE = re.compile(
+    r"\bwhile\(.*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"\bconstant\((\d+)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _split_computations(hlo_text: str) -> Dict[str, list]:
+    """name -> list of body lines.  HLO computations are brace-delimited
+    top-level blocks; ops are one per line."""
+    comps: Dict[str, list] = {}
+    cur, name = None, None
+    for line in hlo_text.splitlines():
+        stripped = line.rstrip()
+        if cur is None:
+            m = _COMP_HEADER_RE.match(stripped.strip())
+            if m and stripped.endswith("{"):
+                name = m.group(1)
+                cur = []
+                if stripped.strip().startswith("ENTRY"):
+                    name = "__entry__"
+            continue
+        if stripped.strip() == "}":
+            comps[name] = cur
+            cur, name = None, None
+            continue
+        cur.append(stripped)
+    return comps
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-kind collective result bytes, while-loop trip-count aware.
+
+    ``cost_analysis`` visits a while body once; so does a naive text scan.
+    ``lax.scan`` layers/chunks would therefore undercount by the trip count.
+    We split the module into computations, read each while's trip count from
+    its condition computation (the loop-bound constant), and weight every
+    collective inside a body by the product of enclosing trip counts.
+
+    Bytes are the collective's *result* size per device (operands are
+    printed without types in optimized HLO); for all-reduce/all-to-all this
+    equals the payload, for all-gather it is the gathered buffer — a
+    uniform, slightly conservative proxy for link traffic.
+    """
+    comps = _split_computations(hlo_text)
+
+    def trip_count(cond_name: str) -> int:
+        consts = [int(c) for line in comps.get(cond_name, [])
+                  for c in _CONST_RE.findall(line)]
+        return max(consts) if consts else 1
+
+    memo: Dict[str, Dict[str, int]] = {}
+
+    def total(comp_name: str) -> Dict[str, int]:
+        if comp_name in memo:
+            return memo[comp_name]
+        memo[comp_name] = {k: 0 for k in COLLECTIVE_OPS}  # cycle guard
+        out = {k: 0 for k in COLLECTIVE_OPS}
+        for line in comps.get(comp_name, []):
+            m = _OP_RE.search(line)
+            if m:
+                kind = m.group(2)
+                for d, s in _SHAPE_RE.findall(m.group(1)):
+                    out[kind] += _shape_bytes(d, s)
+            w = _WHILE_RE.search(line)
+            if w:
+                cond, body = w.group(1), w.group(2)
+                t = trip_count(cond)
+                sub = total(body)
+                for k in out:
+                    out[k] += t * sub[k]
+        memo[comp_name] = out
+        return out
+
+    return total("__entry__")
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: int
+    coll_breakdown: Dict[str, int]
+    peak_memory_per_device: int         # from memory_analysis
+    model_flops_global: float           # 6ND / 2ND useful flops
+    compile_seconds: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        hlo_global = self.flops_per_device * self.chips
+        return self.model_flops_global / hlo_global if hlo_global else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Upper bound on MFU implied by the roofline terms."""
+        t_star = max(self.t_compute, self.t_memory, self.t_collective)
+        if t_star <= 0:
+            return 0.0
+        return (self.model_flops_global
+                / (self.chips * PEAK_FLOPS_BF16 * t_star))
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "coll_breakdown": self.coll_breakdown,
+            "peak_memory_per_device": self.peak_memory_per_device,
+            "model_flops_global": self.model_flops_global,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+            "compile_seconds": self.compile_seconds,
+        }
+
+
+def analyze(compiled, *, arch: str, shape: str, mesh_name: str, chips: int,
+            model_flops_global: float, compile_seconds: float = 0.0,
+            hlo_text: Optional[str] = None) -> Roofline:
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    ma = compiled.memory_analysis()
+    peak = 0
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes"):
+        peak += int(getattr(ma, attr, 0) or 0)
+    # arguments double-counted if aliased with outputs; fine as an upper bound
+    return Roofline(arch, shape, mesh_name, chips, flops, byts,
+                    sum(coll.values()), coll, peak, model_flops_global,
+                    compile_seconds)
+
+
+# ---------------------------------------------------------------------------
+# Trip-count-aware HLO cost walker
+# ---------------------------------------------------------------------------
+#
+# ``compiled.cost_analysis()`` visits every while body ONCE, so lax.scan
+# (layers, h-steps, sequential server updates, CE chunks) undercounts FLOPs
+# by the trip count — and fully unrolling the scans just to count costs is
+# prohibitively slow for 80-layer archs.  This walker parses the optimized
+# HLO text instead: it resolves operand shapes from per-computation symbol
+# tables, counts dot/convolution FLOPs inside fusion computations, charges
+# HBM "bytes accessed" only at fusion/primitive boundaries, and weights
+# every while body by its trip count (read from the loop-bound constant in
+# the condition computation).
+
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^()]*\))|(?:[a-z0-9]+\["
+    r"[0-9,]*\](?:\{[^}]*\})?))\s+([a-z0-9\-]+)")
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(
+    r"(?:true_computation|false_computation|branch_computations=\{[^}]*)"
+    r"=%?([\w.\-]+)")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_DNUMS_RE = re.compile(r"dim_labels=([\w?]+)_([\w?]+)->([\w?]+)")
+_FREE_OPS = frozenset((
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "iota", "partition-id", "replica-id", "custom-call"))
+
+
+def _parse_ops(lines):
+    """Yield (name, outs[(dtype, shape)], opcode, rest-of-line).  Tuple-typed
+    defs (while / multi-output collectives) carry every component shape;
+    ``rest`` starts at the operand list, past the (possibly tuple) type."""
+    out = []
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode = m.groups()
+        outs = [(dt, tuple(int(d) for d in dims.split(",") if d))
+                for dt, dims in _SHAPE_RE.findall(type_str)]
+        out.append((name, outs, opcode, line[m.end():]))
+    return out
+
+
+def _operand_names(rest):
+    # first (...) group past the type holds the operands
+    m = _OPERANDS_RE.search(rest)
+    if not m:
+        return []
+    names = []
+    for tok in m.group(1).split(","):
+        tok = tok.strip().lstrip("%")
+        # strip inline types like "f32[8,16] %foo"
+        tok = tok.split(" ")[-1].lstrip("%")
+        if tok and not tok[0].isdigit():
+            names.append(tok)
+    return names
+
+
+def _dot_flops(line, shape, dtype, symtab):
+    """2 * prod(result) * prod(contracting dims of lhs)."""
+    ops = _operand_names(line)
+    if not ops or ops[0] not in symtab:
+        return 0.0
+    lhs_shape = symtab[ops[0]][1]
+    m = _LHS_CDIMS_RE.search(line)
+    cdims = [int(d) for d in m.group(1).split(",") if d] if m else []
+    k = 1.0
+    for d in cdims:
+        if d < len(lhs_shape):
+            k *= lhs_shape[d]
+    n = 1.0
+    for d in shape:
+        n *= d
+    return 2.0 * n * max(k, 1.0)
+
+
+def _conv_flops(line, shape, symtab):
+    """2 * prod(result) * (kernel spatial * in_channels) via dim_labels."""
+    ops = _operand_names(line)
+    if len(ops) < 2 or ops[1] not in symtab:
+        return 0.0
+    kshape = symtab[ops[1]][1]
+    m = _DNUMS_RE.search(line)
+    if not m:
+        return 0.0
+    klabels = m.group(2)           # e.g. "01io" / "io01"
+    k = 1.0
+    for i, ch in enumerate(klabels):
+        if ch != "o" and i < len(kshape):
+            k *= kshape[i]
+    n = 1.0
+    for d in shape:
+        n *= d
+    return 2.0 * n * k
+
+
+def _outs_bytes(outs) -> float:
+    return float(sum(_shape_bytes(dt, ",".join(str(d) for d in sh))
+                     for dt, sh in outs))
+
+
+def _bytes_of(entry) -> float:
+    dt, sh = entry
+    return float(_shape_bytes(dt, ",".join(str(d) for d in sh)))
+
+
+def _fusion_bytes(comp: str, parsed, symtabs) -> float:
+    """Slice-aware HBM boundary traffic of one fusion computation.
+
+    A loop body fusion often takes a huge carried buffer but only
+    dynamic-slices a row out of it (read = slice) or dynamic-update-slices
+    a row into it (write = update, in-place aliased).  Charging the full
+    buffer per iteration overcounts bytes by the trip count; this model
+    charges parameters by how they are actually consumed.
+    """
+    ops = parsed.get(comp)
+    if not ops:
+        return 0.0
+    symtab = symtabs.get(comp, {})
+    reads = 0.0
+    root_entry = None
+    dus_updates = {}           # DUS op name -> update operand bytes
+    uses: Dict[str, list] = {}
+    for name, outs, opcode, rest in ops:
+        for op in _operand_names(rest):
+            uses.setdefault(op, []).append((opcode, rest))
+        if opcode == "dynamic-update-slice":
+            unames = _operand_names(rest)
+            if len(unames) >= 2 and unames[1] in symtab:
+                dus_updates[name] = _bytes_of(symtab[unames[1]])
+        if len(outs) == 1:
+            root_entry = (name, outs, opcode)
+    for name, outs, opcode, rest in ops:
+        if opcode != "parameter":
+            continue
+        u = uses.get(name, [])
+        if u and all(k == "dynamic-slice" for k, _ in u):
+            # read = sum of the slice results actually extracted
+            reads += sum(_bytes_of(symtab[n2])
+                         for n2, _o2, k2, r2 in ops
+                         if k2 == "dynamic-slice" and n2 in symtab
+                         and name in _operand_names(r2))
+        elif (len(u) == 1 and u[0][0] == "dynamic-update-slice"
+              and _operand_names(u[0][1])[:1] == [name]):
+            # read-modify-write of a slice: charge the update size
+            unames = _operand_names(u[0][1])
+            if len(unames) >= 2 and unames[1] in symtab:
+                reads += _bytes_of(symtab[unames[1]])
+            elif len(outs) == 1:
+                reads += _bytes_of(outs[0])
+        elif len(outs) == 1:
+            reads += _bytes_of(outs[0])
+    # write: if the root is a DUS (in-place aliased), charge the update
+    writes = 0.0
+    if root_entry is not None:
+        rname, routs, ropcode = root_entry
+        if ropcode == "dynamic-update-slice" and rname in dus_updates:
+            writes = dus_updates[rname]
+        else:
+            writes = _outs_bytes(routs)
+    return reads + writes
+
+
+def hlo_costs(hlo_text: str) -> Dict[str, Any]:
+    """Trip-aware {flops, bytes, coll:{kind: bytes}} from optimized HLO."""
+    comps = _split_computations(hlo_text)
+    parsed = {name: _parse_ops(lines) for name, lines in comps.items()}
+    symtabs = {name: {n: outs[0] for n, outs, _, _ in ops if len(outs) == 1}
+               for name, ops in parsed.items()}
+
+    def trip_count(cond_name: str) -> int:
+        consts = [int(c) for line in comps.get(cond_name, [])
+                  for c in _CONST_RE.findall(line)]
+        return max(consts) if consts else 1
+
+    memo: Dict[str, Dict[str, Any]] = {}
+
+    def walk(comp: str) -> Dict[str, Any]:
+        if comp in memo:
+            return memo[comp]
+        zero = {"flops": 0.0, "bytes": 0.0,
+                "coll": {k: 0 for k in COLLECTIVE_OPS}}
+        memo[comp] = zero                      # cycle guard
+        total = {"flops": 0.0, "bytes": 0.0,
+                 "coll": {k: 0 for k in COLLECTIVE_OPS}}
+        symtab = symtabs.get(comp, {})
+        for name, outs, opcode, line in parsed.get(comp, []):
+            base = opcode[:-6] if opcode.endswith("-start") else opcode
+            if base in COLLECTIVE_OPS:
+                total["coll"][base] += int(_outs_bytes(outs))
+            if opcode in _FREE_OPS or opcode.endswith("-done"):
+                continue
+            if opcode == "while":
+                w = _WHILE_RE.search("while(" + line)
+                if w:
+                    tm = _TRIP_RE.search(line)
+                    t = int(tm.group(1)) if tm else trip_count(w.group(1))
+                    sub = walk(w.group(2))
+                    total["flops"] += t * sub["flops"]
+                    total["bytes"] += t * sub["bytes"]
+                    for k in COLLECTIVE_OPS:
+                        total["coll"][k] += t * sub["coll"][k]
+                continue
+            shape = outs[0][1] if len(outs) == 1 else ()
+            if opcode in ("fusion", "call"):
+                m = _CALLS_RE.search(line)
+                if m:
+                    sub = walk(m.group(1))
+                    total["flops"] += sub["flops"]       # flops are real
+                    for k in COLLECTIVE_OPS:             # bytes are not
+                        total["coll"][k] += sub["coll"][k]
+                    # boundary bytes: slice-aware fusion traffic model
+                    total["bytes"] += _fusion_bytes(m.group(1), parsed,
+                                                    symtabs)
+                    continue
+            # boundary bytes: result + known operands (slice ops are
+            # charged at slice size — DUS is in-place aliased)
+            if opcode == "dynamic-update-slice":
+                un = _operand_names(line)
+                upd = (_bytes_of(symtab[un[1]])
+                       if len(un) >= 2 and un[1] in symtab
+                       else _outs_bytes(outs))
+                total["bytes"] += 2.0 * upd
+                continue
+            if opcode == "dynamic-slice":
+                total["bytes"] += 2.0 * _outs_bytes(outs)
+                continue
+            nbytes = _outs_bytes(outs)
+            for op in _operand_names(line):
+                if op in symtab:
+                    odt, osh = symtab[op]
+                    nbytes += _shape_bytes(odt, ",".join(str(d) for d in osh))
+            total["bytes"] += nbytes
+            if opcode == "dot":
+                total["flops"] += _dot_flops(line, shape, outs[0][0], symtab)
+            elif opcode == "convolution":
+                total["flops"] += _conv_flops(line, shape, symtab)
+            elif opcode == "conditional":
+                for b in _BRANCHES_RE.findall(line):
+                    sub = walk(b)
+                    total["flops"] += sub["flops"]
+                    total["bytes"] += sub["bytes"]
+        memo[comp] = total
+        return total
+
+    return walk("__entry__")
+
+
+def model_flops(cfg, shape, counts) -> float:
+    """Useful model FLOPs per step: 6*N*tokens (train) / 2*N*tokens (infer)."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * counts.active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * counts.active * tokens
+    return 2.0 * counts.active * shape.global_batch      # one token/seq

@@ -1,0 +1,85 @@
+"""Batched serving driver for the final CSE-FSL model.
+
+After training, the deployed model is the *merged* (aggregated client stage
++ single server stage) network (paper Step 4).  This driver runs continuous
+batching at a fixed batch size: prefill each request batch, then decode
+greedily, reporting tokens/s.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
+      --batch 4 --prompt-len 64 --gen 32 [--reduced]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.models import model as tf_mod
+
+
+def make_serving_fns(cfg, window: int = 0):
+    prefill = jax.jit(lambda p, i: tf_mod.prefill(cfg, p, i, window=window))
+
+    def decode(params, token, pos, caches):
+        return tf_mod.decode_step(cfg, params, token, pos, caches,
+                                  window=window)
+
+    return prefill, jax.jit(decode, donate_argnums=(3,))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--num-batches", type=int, default=3)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if cfg.encoder_only:
+        raise SystemExit(f"{cfg.name} is encoder-only: no decode step "
+                         "(DESIGN §Skips)")
+    params = tf_mod.init_params(cfg, jax.random.PRNGKey(0))
+    prefill, decode = make_serving_fns(cfg)
+
+    rng = np.random.default_rng(0)
+    total_tokens, t_total = 0, 0.0
+    for bi in range(args.num_batches):
+        inputs = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len),
+                         dtype=np.int32))}
+        if cfg.family == "vlm":
+            p = cfg.num_image_tokens
+            inputs["image_embeds"] = jnp.asarray(
+                rng.normal(size=(args.batch, p, cfg.d_model)), jnp.float32)
+        t0 = time.time()
+        logits, caches = prefill(params, inputs)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out = [tok]
+        for step in range(args.gen - 1):
+            pos = jnp.asarray(args.prompt_len + step, jnp.int32)
+            logits, caches = decode(params, tok, pos, caches)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            out.append(tok)
+        jax.block_until_ready(tok)
+        dt = time.time() - t0
+        toks = args.batch * args.gen
+        total_tokens += toks
+        t_total += dt
+        print(f"batch {bi}: {toks} tokens in {dt:.2f}s "
+              f"({toks/dt:.1f} tok/s)")
+    print(f"\ntotal: {total_tokens} tokens, {total_tokens/t_total:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x input-shape) combo.
+
+``input_specs`` returns the exact pytree each step function consumes —
+weak-type-correct, shardable, no device allocation (the dry-run pattern).
+``make_inputs`` materializes small *real* arrays with the same structure for
+smoke tests / real runs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import dtype_of
+from repro.configs.base import FSLConfig, ModelConfig, ShapeConfig
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def _batch_inputs(cfg: ModelConfig, lead: Tuple[int, ...], seq: int,
+                  as_spec: bool, rng: np.random.Generator | None):
+    """One mini-batch's input pytree with leading dims ``lead`` (e.g. (n,h,B))."""
+    dt = dtype_of(cfg.dtype)
+
+    def arr(shape, dtype, gen):
+        if as_spec:
+            return _sds(shape, dtype)
+        return jnp.asarray(gen(shape))
+
+    out: Dict[str, Any] = {}
+    if cfg.family == "audio":
+        out["features"] = arr(lead + (seq, cfg.frontend_dim), dt,
+                              lambda s: rng.normal(size=s).astype(np.float32))
+        return out
+    out["tokens"] = arr(lead + (seq,), jnp.int32,
+                        lambda s: rng.integers(0, cfg.vocab_size, s, dtype=np.int32))
+    if cfg.family == "vlm":
+        p = cfg.num_image_tokens
+        out["image_embeds"] = arr(lead + (p, cfg.d_model), dt,
+                                  lambda s: rng.normal(size=s).astype(np.float32))
+    return out
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig, fsl: FSLConfig,
+                      h: int | None = None, as_spec: bool = True, seed: int = 0):
+    """(inputs, labels) with leading [n_clients, h, B_local] dims."""
+    n = fsl.num_clients
+    hh = h if h is not None else fsl.h
+    assert shape.global_batch % n == 0, (shape.global_batch, n)
+    b = shape.global_batch // n
+    rng = None if as_spec else np.random.default_rng(seed)
+    inputs = _batch_inputs(cfg, (n, hh, b), shape.seq_len, as_spec, rng)
+    if as_spec:
+        labels = _sds((n, hh, b, shape.seq_len), jnp.int32)
+    else:
+        labels = jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                          (n, hh, b, shape.seq_len),
+                                          dtype=np.int32))
+    return inputs, labels
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig, as_spec: bool = True,
+                  seed: int = 0):
+    rng = None if as_spec else np.random.default_rng(seed)
+    return _batch_inputs(cfg, (shape.global_batch,), shape.seq_len, as_spec, rng)
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, as_spec: bool = True,
+                 seed: int = 0):
+    """(token [B], pos scalar, caches).  Cache length = full context, except
+    sliding-window archs where the ring buffer is the window."""
+    from repro.models.model import decode_cache_specs, init_decode_caches
+    b = shape.global_batch
+    cache_len = shape.seq_len
+    window = 0
+    if shape.seq_len > 32_768 and cfg.swa_window:
+        window = cfg.swa_window
+        cache_len = cfg.swa_window
+    if as_spec:
+        token = _sds((b,), jnp.int32)
+        pos = _sds((), jnp.int32)
+        caches = decode_cache_specs(cfg, b, cache_len)
+    else:
+        rng = np.random.default_rng(seed)
+        token = jnp.asarray(rng.integers(0, cfg.vocab_size, (b,), dtype=np.int32))
+        pos = jnp.asarray(shape.seq_len - 1, jnp.int32)
+        caches = init_decode_caches(cfg, b, cache_len)
+    return token, pos, caches, window
+
+
+def combo_supported(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether (arch x shape) runs; reason recorded in DESIGN §Skips."""
+    if cfg.encoder_only and shape.kind == "decode":
+        return False, "encoder-only: no autoregressive decode step"
+    if (shape.kind == "decode" and shape.seq_len > 32_768
+            and cfg.family in ("dense", "moe", "vlm") and not cfg.swa_window):
+        return False, "full attention at 500k context requires sub-quadratic variant"
+    return True, ""

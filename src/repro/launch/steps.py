@@ -1,0 +1,204 @@
+"""Lowerable step builders: one per input-shape kind.
+
+Each builder returns ``(fn, args)`` where ``args`` is a tuple of
+ShapeDtypeStructs *with NamedShardings attached* — ready for
+``jax.jit(fn).lower(*args)`` under the mesh (the dry-run pattern), or for
+feeding real arrays with the same shardings (the real launchers).
+
+Sharding policy knobs live here (and are what §Perf iterates):
+  - ``fsdp_server``: 2D (data x model) server params for large archs,
+    TP-only below ``FSDP_THRESHOLD`` params.
+  - client stacks over the composite batch axes; one client per data row.
+  - decode KV caches: sequence dim over the model axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding as shd
+from repro.common import dtype_of
+from repro.configs.base import FSLConfig, ModelConfig, ShapeConfig
+from repro.core import protocol
+from repro.core.bundle import transformer_bundle
+from repro.launch import specs as specs_mod
+from repro.models import model as tf_mod
+from repro.models.blocks import Ctx
+
+FSDP_THRESHOLD = 9e9        # params; >= this => 2D (data x model) server stage
+
+
+def _count(tree, skip=()) -> int:
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        keys = [str(getattr(p, "key", "")) for p in path]
+        if any(k in skip for k in keys):
+            continue
+        total += int(np.prod(leaf.shape))
+    return total
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamCounts:
+    client: int             # one client's stage (no embed)
+    server: int             # server stage (no head)
+    embed_head: int         # embeddings + lm head + aux head
+    active: int             # matmul-active params (MoE: top-k of experts)
+    total: int
+
+
+def param_counts(cfg: ModelConfig) -> ParamCounts:
+    abs_p = tf_mod.abstract_params(cfg)
+    client = _count(abs_p["client"], skip=("embed",))
+    server = _count(abs_p["server"], skip=("head", "embed"))
+    eh = _count(abs_p) - client - server - _count(abs_p["aux"])
+    total = _count(abs_p)
+    active = client + server
+    if cfg.num_experts:
+        # expert tensors (w1/w2/w3 under a "moe" sub-tree) contribute only
+        # their top-k fraction to the active-param count.
+        expert = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(abs_p)[0]:
+            keys = [str(getattr(p, "key", "")) for p in path]
+            if "moe" in keys and keys[-1] in ("w1", "w2", "w3"):
+                expert += int(np.prod(leaf.shape))
+        frac = cfg.num_experts_per_tok / cfg.num_experts
+        active = active - expert + int(expert * frac)
+    # lm head participates in the matmul path
+    head = _count({"h": abs_p["server"]["head"]})
+    active += head
+    return ParamCounts(client, server, eh, active, total)
+
+
+def wants_fsdp(cfg: ModelConfig) -> bool:
+    return param_counts(cfg).total >= FSDP_THRESHOLD
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+
+def fsl_for_mesh(mesh, shape: ShapeConfig, h: int = 1) -> FSLConfig:
+    """One federated client per data row of the mesh."""
+    n = int(np.prod([mesh.shape[a] for a in shd.batch_axes(mesh)]))
+    assert shape.global_batch % n == 0, (shape.global_batch, n)
+    return FSLConfig(num_clients=n, h=h)
+
+
+def build_train(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                fsl: Optional[FSLConfig] = None,
+                fsdp_server: Optional[bool] = None,
+                server_update: str = "sequential",
+                shard_server_batch: bool = False):
+    fsl = fsl or fsl_for_mesh(mesh, shape)
+    fsl = dataclasses.replace(fsl, server_update=server_update,
+                              unroll=cfg.dryrun_unroll)
+    bundle = transformer_bundle(cfg)
+    constraint = None
+    if shard_server_batch:
+        # §Perf: during the sequential server scan each step consumes ONE
+        # client's [B_local, S, d] batch; without a hint GSPMD leaves the
+        # batch dim unsharded (the stacked n dim owned the data axis) and
+        # the whole data axis idles.  Constrain dim0 over the batch axes.
+        baxis = shd.batch_axes(mesh)
+
+        def constraint(x):
+            spec = jax.sharding.PartitionSpec(
+                *((baxis,) + (None,) * (x.ndim - 1)))
+            return jax.lax.with_sharding_constraint(
+                x, jax.sharding.NamedSharding(mesh, spec))
+
+    step = protocol.make_round_step(bundle, fsl, server_constraint=constraint)
+    if fsdp_server is None:
+        fsdp_server = wants_fsdp(cfg)
+
+    state_abs = jax.eval_shape(
+        lambda k: protocol.init_state(bundle, fsl, k),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    sspec = shd.state_specs(state_abs, mesh=mesh, fsdp_server=fsdp_server)
+    state_in = shd.with_shardings(state_abs, sspec, mesh)
+
+    inputs, labels = specs_mod.train_batch_specs(cfg, shape, fsl)
+    bspec = shd.lead_batch_spec({"i": inputs, "l": labels}, mesh=mesh)
+    batch_in = shd.with_shardings({"i": inputs, "l": labels}, bspec, mesh)
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+
+    def fn(state, batch, lr):
+        return step(state, (batch["i"], batch["l"]), lr)
+
+    return fn, (state_in, batch_in, lr)
+
+
+# ---------------------------------------------------------------------------
+# Prefill step
+# ---------------------------------------------------------------------------
+
+
+def _serving_params(cfg: ModelConfig, mesh, fsdp: bool = False):
+    abs_p = tf_mod.abstract_params(cfg)
+    pspec = shd.params_specs(abs_p, mesh=mesh, fsdp=fsdp)
+    return shd.with_shardings(abs_p, pspec, mesh)
+
+
+def build_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    params_in = _serving_params(cfg, mesh)
+    inputs = specs_mod.prefill_specs(cfg, shape)
+    ispec = shd.lead_batch_spec(inputs, mesh=mesh)
+    inputs_in = shd.with_shardings(inputs, ispec, mesh)
+    window = cfg.swa_window if shape.seq_len > 32_768 else 0
+
+    def fn(params, inputs):
+        return tf_mod.prefill(cfg, params, inputs, window=window)
+
+    return fn, (params_in, inputs_in)
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+
+def build_decode(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                 params_2d: bool = False, cache_layout: str = "seq"):
+    """``params_2d``: §Perf experiment — weights 2D (data x model) sharded
+    for decode.  ``cache_layout``: "seq" (baseline) or "hd" — shard the KV
+    head_dim instead of the seq dim so the decode cache write stays local
+    (see sharding.cache_specs_tree)."""
+    params_in = _serving_params(cfg, mesh, fsdp=params_2d)
+    token, pos, caches, window = specs_mod.decode_specs(cfg, shape)
+    cspec = shd.cache_specs_tree(caches, mesh=mesh,
+                                 batch_axis=shd.batch_axes(mesh),
+                                 layout=cache_layout)
+    caches_in = shd.with_shardings(caches, cspec, mesh)
+    token_in = shd.with_shardings(
+        token, jax.sharding.PartitionSpec(shd.batch_axes(mesh))
+        if token.shape[0] % int(np.prod([mesh.shape[a]
+                                         for a in shd.batch_axes(mesh)])) == 0
+        else jax.sharding.PartitionSpec(None), mesh)
+
+    def fn(params, token, pos, caches):
+        return tf_mod.decode_step(cfg, params, token, pos, caches,
+                                  window=window)
+
+    return fn, (params_in, token_in, pos, caches_in)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh, **kw):
+    if shape.kind == "train":
+        kw.pop("params_2d", None)
+        return build_train(cfg, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, mesh)
+    return build_decode(cfg, shape, mesh,
+                        params_2d=kw.get("params_2d", False),
+                        cache_layout=kw.get("cache_layout", "seq"))

@@ -1,0 +1,1 @@
+from repro.models import blocks, cnn, layers, model  # noqa: F401

@@ -1,0 +1,358 @@
+"""Per-layer blocks: init + apply for every architecture family.
+
+A block is ``(params, x, ctx, cache) -> (x, new_cache, aux_loss)``.  Depth is
+realized by ``lax.scan`` over params stacked on a leading layer axis (see
+``model.py``), so every 80-layer config compiles in O(1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+@dataclasses.dataclass
+class Ctx:
+    cfg: ModelConfig
+    mode: str                      # "train" | "prefill" | "decode"
+    pos: Any = 0                   # scalar: decode write position / q offset
+    pos_ids: Any = None            # [B,S] (or [3,B,S] for M-RoPE)
+    window: int = 0                # sliding window (0 = full)
+    cache_len: int = 0             # allocated cache slots (decode)
+
+
+def _init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# Attention sub-block
+# ---------------------------------------------------------------------------
+
+
+def attn_init(cfg: ModelConfig, key, dtype):
+    d, h, kh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    ks = _keys(key, 4)
+    p = {
+        "ln": jnp.ones((d,), dtype),
+        "wq": _init(ks[0], (d, h * hd), d ** -0.5, dtype),
+        "wk": _init(ks[1], (d, kh * hd), d ** -0.5, dtype),
+        "wv": _init(ks[2], (d, kh * hd), d ** -0.5, dtype),
+        "wo": _init(ks[3], (h * hd, d), (h * hd) ** -0.5, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kh * hd,), dtype)
+        p["bv"] = jnp.zeros((kh * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def attn_apply(cfg: ModelConfig, p, x, ctx: Ctx, cache):
+    b, s, d = x.shape
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    xn = L.rmsnorm(x, p["ln"])
+    q = xn @ p["wq"]
+    k = xn @ p["wk"]
+    v = xn @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kh, hd)
+    v = v.reshape(b, s, kh, hd)
+    if cfg.qk_norm:
+        q = L.rmsnorm(q, p["q_norm"])
+        k = L.rmsnorm(k, p["k_norm"])
+    pos_ids = ctx.pos_ids
+    if pos_ids is None:
+        if cfg.mrope_sections is not None:
+            pos_ids = L.mrope_pos_ids(cfg.num_image_tokens, b, s, ctx.pos)
+        else:
+            base = jnp.arange(s) + ctx.pos
+            pos_ids = jnp.broadcast_to(base[None], (b, s))
+    q = L.apply_rope(q, pos_ids, cfg.rope_theta, cfg.mrope_sections)
+    k = L.apply_rope(k, pos_ids, cfg.rope_theta, cfg.mrope_sections)
+
+    new_cache = None
+    if ctx.mode == "decode":
+        # cache: {"k"/"v": [B, cache_len, KH, hd]} — ring buffer when the
+        # allocated length is a sliding window smaller than the context.
+        ck, cv = cache["k"], cache["v"]
+        clen = ck.shape[1]
+        slot = ctx.pos % clen
+        ck = lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
+        cv = lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+        kv_len = jnp.minimum(ctx.pos + 1, clen)
+        out = L.attention(q, ck, cv, causal=False, kv_len=kv_len)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        if (cfg.use_pallas and ctx.window and not cfg.encoder_only
+                and s % 128 == 0):
+            from repro.kernels import ops
+            out = ops.swa_attention(q, k, v, ctx.window)
+        else:
+            out = L.attention(q, k, v, causal=not cfg.encoder_only,
+                              window=ctx.window, q_offset=ctx.pos,
+                              unroll=cfg.dryrun_unroll)
+        if ctx.mode == "prefill":
+            if ctx.window:          # keep only the trailing window
+                w = min(ctx.window, s)
+                # ring alignment: decode writes position p at slot p % w, so
+                # slot i must hold position with (pos % w) == i.  The kept
+                # positions are s-w .. s-1; roll right by (s-w) % w.
+                shift = (s - w) % w
+                new_cache = {"k": jnp.roll(k[:, s - w:], shift, axis=1),
+                             "v": jnp.roll(v[:, s - w:], shift, axis=1)}
+            else:
+                new_cache = {"k": k, "v": v}
+    y = out.reshape(b, s, h * hd) @ p["wo"]
+    return x + y, new_cache
+
+
+def attn_cache_spec(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    kh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    shape = (batch, cache_len, kh, hd)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP sub-block (SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(cfg: ModelConfig, key, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = _keys(key, 3)
+    return {
+        "ln": jnp.ones((d,), dtype),
+        "w1": _init(ks[0], (d, f), d ** -0.5, dtype),
+        "w3": _init(ks[1], (d, f), d ** -0.5, dtype),
+        "w2": _init(ks[2], (f, d), f ** -0.5, dtype),
+    }
+
+
+def mlp_apply(p, x):
+    xn = L.rmsnorm(x, p["ln"])
+    hidden = L.silu(xn @ p["w1"]) * (xn @ p["w3"])
+    return x + hidden @ p["w2"]
+
+
+# ---------------------------------------------------------------------------
+# Block kinds
+# ---------------------------------------------------------------------------
+
+
+def dense_init(cfg, key, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"attn": attn_init(cfg, k1, dtype), "mlp": mlp_init(cfg, k2, dtype)}
+
+
+def dense_apply(cfg, p, x, ctx: Ctx, cache):
+    x, new_cache = attn_apply(cfg, p["attn"], x, ctx, cache)
+    x = mlp_apply(p["mlp"], x)
+    return x, new_cache, jnp.float32(0.0)
+
+
+def moe_init(cfg, key, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    k1, kr, k2, k3, k4 = _keys(key, 5)
+    return {
+        "attn": attn_init(cfg, k1, dtype),
+        "moe": {
+            "ln": jnp.ones((d,), dtype),
+            "router": _init(kr, (d, e), d ** -0.5, jnp.float32),
+            "w1": _init(k2, (e, d, f), d ** -0.5, dtype),
+            "w3": _init(k3, (e, d, f), d ** -0.5, dtype),
+            "w2": _init(k4, (e, f, d), f ** -0.5, dtype),
+        },
+    }
+
+
+def moe_apply(cfg, p, x, ctx: Ctx, cache):
+    x, new_cache = attn_apply(cfg, p["attn"], x, ctx, cache)
+    b, s, d = x.shape
+    xn = L.rmsnorm(x, p["moe"]["ln"]).reshape(b * s, d)
+    group = min(cfg.moe_group_size, b * s)
+    y, aux = L.moe_ffn(xn, p["moe"], num_experts=cfg.num_experts,
+                       k=cfg.num_experts_per_tok,
+                       capacity_factor=cfg.moe_capacity_factor,
+                       group_size=group)
+    return x + y.reshape(b, s, d), new_cache, aux
+
+
+def mamba1_init(cfg, key, dtype):
+    d, din, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dtr, k = cfg.resolved_dt_rank, cfg.ssm_conv
+    ks = _keys(key, 5)
+    a_init = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (din, n))
+    return {
+        "ln": jnp.ones((d,), dtype),
+        "in_proj": _init(ks[0], (d, 2 * din), d ** -0.5, dtype),
+        "conv_w": _init(ks[1], (din, k), k ** -0.5, dtype),
+        "conv_b": jnp.zeros((din,), dtype),
+        "x_proj": _init(ks[2], (din, dtr + 2 * n), din ** -0.5, dtype),
+        "dt_w": _init(ks[3], (dtr, din), dtr ** -0.5, dtype),
+        "dt_b": jnp.full((din,), -4.6, dtype),        # softplus^-1(0.01)
+        "a_log": jnp.log(a_init),
+        "d_skip": jnp.ones((din,), jnp.float32),
+        "out_proj": _init(ks[4], (din, d), din ** -0.5, dtype),
+    }
+
+
+def _mamba1_inner(cfg, p, xc, z):
+    """Shared post-conv math.  xc: [B,S,din] (conv output, pre-SiLU)."""
+    n, dtr = cfg.ssm_state, cfg.resolved_dt_rank
+    xc = L.silu(xc)
+    proj = xc @ p["x_proj"]
+    dt_r, b_mat, c_mat = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_w"] + p["dt_b"])
+    a = -jnp.exp(p["a_log"])
+    return xc, dt, a, b_mat, c_mat
+
+
+def mamba1_apply(cfg, p, x, ctx: Ctx, cache):
+    b, s, d = x.shape
+    din = cfg.d_inner
+    xn = L.rmsnorm(x, p["ln"])
+    xz = xn @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    new_cache = None
+    if ctx.mode == "decode":
+        xc1, conv_state = L.conv1d_decode(xin[:, 0], cache["conv"],
+                                          p["conv_w"], p["conv_b"])
+        xc, dt, a, b_mat, c_mat = _mamba1_inner(cfg, p, xc1[:, None], z)
+        y, h = L.selective_scan_decode(xc[:, 0], dt[:, 0], a, b_mat[:, 0],
+                                       c_mat[:, 0], p["d_skip"], cache["ssm"])
+        y = y[:, None]
+        new_cache = {"conv": conv_state, "ssm": h}
+    else:
+        xc0 = L.causal_conv1d(xin, p["conv_w"], p["conv_b"])
+        xc, dt, a, b_mat, c_mat = _mamba1_inner(cfg, p, xc0, z)
+        if ctx.mode == "prefill":
+            y, h = L.selective_scan(xc, dt, a, b_mat, c_mat, p["d_skip"],
+                                    chunk=cfg.ssm_chunk, return_state=True)
+            kc = cfg.ssm_conv - 1
+            new_cache = {"conv": xin[:, s - kc:], "ssm": h}
+        elif cfg.use_pallas and cfg.d_inner % 128 == 0:
+            from repro.kernels import ops
+            y = ops.ssm_scan(xc, dt, a, b_mat, c_mat, p["d_skip"],
+                             cfg.ssm_chunk)
+        else:
+            y = L.selective_scan(xc, dt, a, b_mat, c_mat, p["d_skip"],
+                                 chunk=cfg.ssm_chunk)
+    y = y * L.silu(z)
+    return x + y @ p["out_proj"], new_cache, jnp.float32(0.0)
+
+
+def mamba1_cache_spec(cfg, batch, dtype):
+    din, n, k = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {"conv": jax.ShapeDtypeStruct((batch, k - 1, din), dtype),
+            "ssm": jax.ShapeDtypeStruct((batch, din, n), jnp.float32)}
+
+
+def mamba2_init(cfg, key, dtype):
+    d, din, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    h, k = cfg.resolved_ssm_heads, cfg.ssm_conv
+    conv_ch = din + 2 * n
+    ks = _keys(key, 3)
+    return {
+        "ln": jnp.ones((d,), dtype),
+        "in_proj": _init(ks[0], (d, 2 * din + 2 * n + h), d ** -0.5, dtype),
+        "conv_w": _init(ks[1], (conv_ch, k), k ** -0.5, dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "dt_b": jnp.full((h,), -4.6, jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "gate_ln": jnp.ones((din,), dtype),
+        "out_proj": _init(ks[2], (din, d), din ** -0.5, dtype),
+    }
+
+
+def mamba2_apply(cfg, p, x, ctx: Ctx, cache):
+    b, s, d = x.shape
+    din, n, nh = cfg.d_inner, cfg.ssm_state, cfg.resolved_ssm_heads
+    hp = din // nh
+    xn = L.rmsnorm(x, p["ln"])
+    proj = xn @ p["in_proj"]
+    z, xbc, dt_raw = jnp.split(proj, [din, 2 * din + 2 * n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_b"])
+    new_cache = None
+    if ctx.mode == "decode":
+        xbc1, conv_state = L.conv1d_decode(xbc[:, 0], cache["conv"],
+                                           p["conv_w"], p["conv_b"])
+        xbc1 = L.silu(xbc1)
+        xin, b_mat, c_mat = jnp.split(xbc1, [din, din + n], axis=-1)
+        y, h = L.ssd_decode(xin.reshape(b, nh, hp), dt[:, 0], p["a_log"],
+                            b_mat, c_mat, cache["ssm"])
+        y = (y + p["d_skip"][None, :, None] * xin.reshape(b, nh, hp)
+             ).astype(x.dtype)
+        y = y.reshape(b, 1, din)
+        new_cache = {"conv": conv_state, "ssm": h}
+    else:
+        xbc_c = L.silu(L.causal_conv1d(xbc, p["conv_w"], p["conv_b"]))
+        xin, b_mat, c_mat = jnp.split(xbc_c, [din, din + n], axis=-1)
+        xh = xin.reshape(b, s, nh, hp)
+        if ctx.mode == "prefill":
+            y, h = L.ssd_scan(xh, dt, p["a_log"], b_mat, c_mat,
+                              chunk=cfg.ssm_chunk, return_state=True)
+            kc = cfg.ssm_conv - 1
+            new_cache = {"conv": xbc[:, s - kc:], "ssm": h}
+        else:
+            y = L.ssd_scan(xh, dt, p["a_log"], b_mat, c_mat,
+                           chunk=cfg.ssm_chunk)
+        y = (y + p["d_skip"][None, None, :, None] * xh).astype(x.dtype)
+        y = y.reshape(b, s, din)
+    y = L.rmsnorm(y * L.silu(z), p["gate_ln"])
+    return x + y @ p["out_proj"], new_cache, jnp.float32(0.0)
+
+
+def mamba2_cache_spec(cfg, batch, dtype):
+    din, n, k = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    nh, hp = cfg.resolved_ssm_heads, cfg.d_inner // cfg.resolved_ssm_heads
+    return {"conv": jax.ShapeDtypeStruct((batch, k - 1, din + 2 * n), dtype),
+            "ssm": jax.ShapeDtypeStruct((batch, nh, n, hp), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+BLOCKS = {
+    "dense": (dense_init, dense_apply),
+    "moe": (moe_init, moe_apply),
+    "mamba1": (mamba1_init, mamba1_apply),
+    "mamba2": (mamba2_init, mamba2_apply),
+}
+
+
+def block_kind(cfg: ModelConfig) -> str:
+    if cfg.family == "moe":
+        return "moe"
+    if cfg.family == "ssm":
+        return cfg.ssm_variant or "mamba1"
+    if cfg.family == "hybrid":
+        return cfg.ssm_variant or "mamba2"
+    return "dense"          # dense / vlm / audio
+
+
+def block_cache_spec(cfg: ModelConfig, kind: str, batch: int, cache_len: int,
+                     dtype):
+    if kind in ("dense", "moe"):
+        return attn_cache_spec(cfg, batch, cache_len, dtype)
+    if kind == "mamba1":
+        return mamba1_cache_spec(cfg, batch, dtype)
+    return mamba2_cache_spec(cfg, batch, dtype)

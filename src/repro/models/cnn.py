@@ -1,0 +1,159 @@
+"""The paper's experiment models: split CNNs for CIFAR-10 / F-EMNIST.
+
+Client stage: two conv(+pool, +LRN) layers.  Auxiliary net: MLP or
+1x1-conv + MLP (paper §VI-C, Tables III/IV).  Server stage: an MLP tower.
+All pure JAX; small enough to *train for real* on CPU in the benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    in_shape: Tuple[int, int, int]          # (H, W, C)
+    num_classes: int
+    conv_channels: Tuple[int, int] = (64, 64)
+    kernel: int = 5
+    server_widths: Tuple[int, ...] = (384, 192)
+    aux_kind: str = "mlp"                   # "mlp" | "conv1x1"
+    aux_channels: int = 54                  # 1x1-conv output channels
+    lrn: bool = True
+    # "conv_pool_conv_pool" (paper CIFAR-10, SAME convs) or
+    # "conv_conv_pool" (paper F-EMNIST, VALID convs — Reddi et al. model)
+    layout: str = "conv_pool_conv_pool"
+
+    @property
+    def smashed_hw(self) -> Tuple[int, int]:
+        h, w, _ = self.in_shape
+        if self.layout == "conv_conv_pool":
+            k = self.kernel - 1
+            return (h - 2 * k) // 2, (w - 2 * k) // 2
+        return h // 4, w // 4               # two SAME convs + two 2x2 pools
+
+    @property
+    def smashed_size(self) -> int:
+        h, w = self.smashed_hw
+        return h * w * self.conv_channels[1]
+
+
+# Paper experiment models, matched to Tables III/IV exactly:
+#   CIFAR-10 (TF-tutorial CNN on 24x24 crops): client 107,328 params,
+#   aux-MLP 23,050 (2.16%), server 960,970.
+CIFAR10 = CNNConfig("cifar10_cnn", (24, 24, 3), 10)
+#   F-EMNIST (Reddi et al. CNN): client 18,816, aux-MLP 571,454 (47.36%),
+#   server 1,187,774.
+FEMNIST = CNNConfig("femnist_cnn", (28, 28, 1), 62,
+                    conv_channels=(32, 64), kernel=3, server_widths=(128,),
+                    aux_channels=64, lrn=False, layout="conv_conv_pool")
+
+
+def _conv_init(key, k, cin, cout):
+    w = jax.random.normal(key, (k, k, cin, cout)) * (k * k * cin) ** -0.5
+    return {"w": w.astype(jnp.float32), "b": jnp.zeros((cout,), jnp.float32)}
+
+
+def _fc_init(key, din, dout):
+    w = jax.random.normal(key, (din, dout)) * din ** -0.5
+    return {"w": w.astype(jnp.float32), "b": jnp.zeros((dout,), jnp.float32)}
+
+
+def _conv(x, p, padding: str = "SAME"):
+    y = lax.conv_general_dilated(x, p["w"], (1, 1), padding,
+                                 dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def _pool(x):
+    # non-overlapping 2x2 max pool via reshape: identical to reduce_window
+    # for even H/W but with a cheap backward (reduce_window's grad lowers
+    # to select-and-scatter, which is extremely slow on CPU).
+    b, h, w, c = x.shape
+    if h % 2 or w % 2:
+        x = jnp.pad(x, ((0, 0), (0, h % 2), (0, w % 2), (0, 0)),
+                    constant_values=-jnp.inf)
+        b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+
+
+def _lrn(x, n: int = 5, alpha: float = 1e-4, beta: float = 0.75, k: float = 2.0):
+    sq = jnp.square(x)
+    summed = lax.reduce_window(sq, 0.0, lax.add, (1, 1, 1, n), (1, 1, 1, 1),
+                               "SAME")
+    return x / jnp.power(k + alpha * summed, beta)
+
+
+# ---------------------------------------------------------------------------
+
+
+def client_init(cfg: CNNConfig, key):
+    k1, k2 = jax.random.split(key)
+    c0, c1 = cfg.conv_channels
+    return {"conv1": _conv_init(k1, cfg.kernel, cfg.in_shape[2], c0),
+            "conv2": _conv_init(k2, cfg.kernel, c0, c1)}
+
+
+def client_forward(cfg: CNNConfig, p, x):
+    """x: [B,H,W,C] -> smashed [B,h,w,c]."""
+    if cfg.layout == "conv_conv_pool":      # F-EMNIST (Reddi et al.)
+        x = jax.nn.relu(_conv(x, p["conv1"], "VALID"))
+        x = jax.nn.relu(_conv(x, p["conv2"], "VALID"))
+        return _pool(x)
+    x = _pool(jax.nn.relu(_conv(x, p["conv1"])))
+    if cfg.lrn:
+        x = _lrn(x)
+    x = _pool(jax.nn.relu(_conv(x, p["conv2"])))
+    if cfg.lrn:
+        x = _lrn(x)
+    return x
+
+
+def aux_init(cfg: CNNConfig, key):
+    h, w = cfg.smashed_hw
+    c = cfg.conv_channels[1]
+    if cfg.aux_kind == "mlp":
+        return {"fc": _fc_init(key, h * w * c, cfg.num_classes)}
+    k1, k2 = jax.random.split(key)
+    return {"conv": _conv_init(k1, 1, c, cfg.aux_channels),
+            "fc": _fc_init(k2, h * w * cfg.aux_channels, cfg.num_classes)}
+
+
+def aux_forward(cfg: CNNConfig, p, smashed):
+    x = smashed
+    if "conv" in p:
+        x = jax.nn.relu(_conv(x, p["conv"]))
+    b = x.shape[0]
+    x = x.reshape(b, -1)
+    return x @ p["fc"]["w"] + p["fc"]["b"]
+
+
+def server_init(cfg: CNNConfig, key):
+    widths = (cfg.smashed_size,) + cfg.server_widths + (cfg.num_classes,)
+    keys = jax.random.split(key, len(widths) - 1)
+    return {f"fc{i}": _fc_init(keys[i], widths[i], widths[i + 1])
+            for i in range(len(widths) - 1)}
+
+
+def server_forward(cfg: CNNConfig, p, smashed):
+    b = smashed.shape[0]
+    x = smashed.reshape(b, -1)
+    n = len(p)
+    for i in range(n):
+        x = x @ p[f"fc{i}"]["w"] + p[f"fc{i}"]["b"]
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def init_params(cfg: CNNConfig, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"client": client_init(cfg, k1), "aux": aux_init(cfg, k2),
+            "server": server_init(cfg, k3)}

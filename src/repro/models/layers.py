@@ -1,0 +1,387 @@
+"""Functional neural-net ops shared by all architectures.
+
+Pure functions over explicit parameter pytrees; no global state.  All
+reductions that affect numerics (softmax, norms, scan states) run in fp32
+regardless of the activation dtype.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(dt)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (incl. M-RoPE for qwen2-vl)
+# ---------------------------------------------------------------------------
+
+
+def rope_inv_freq(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def _rope_angles(pos, inv_freq):
+    # pos [...,S] float -> angles [...,S, hd/2]
+    return pos[..., None].astype(jnp.float32) * inv_freq
+
+
+def apply_rope(x, pos, theta: float,
+               mrope_sections: Optional[Tuple[int, ...]] = None):
+    """Rotate q/k.  x: [B,S,H,hd]. pos: [B,S] (or [3,B,S] for M-RoPE)."""
+    hd = x.shape[-1]
+    inv_freq = rope_inv_freq(hd, theta)            # [hd/2]
+    if mrope_sections is None:
+        ang = _rope_angles(pos, inv_freq)          # [B,S,hd/2]
+    else:
+        # M-RoPE: split the hd/2 frequency slots into (t, h, w) sections,
+        # each driven by its own position stream pos[i].
+        assert sum(mrope_sections) == hd // 2, (mrope_sections, hd)
+        parts = []
+        start = 0
+        for i, sec in enumerate(mrope_sections):
+            parts.append(_rope_angles(pos[i], inv_freq[start:start + sec]))
+            start += sec
+        ang = jnp.concatenate(parts, axis=-1)      # [B,S,hd/2]
+    cos = jnp.cos(ang)[:, :, None, :]              # [B,S,1,hd/2]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_pos_ids(num_image_tokens: int, b: int, s, offset):
+    """Deterministic M-RoPE position streams (t,h,w) for the VLM stub.
+
+    The first ``num_image_tokens`` positions are a square patch grid
+    (t=0, h/w = grid coords); text continues with equal streams.  Both the
+    client and server stages reconstruct these from (shape, offset) — no
+    position metadata accompanies the smashed data.
+    """
+    pos = jnp.arange(s) + offset
+    p = num_image_tokens
+    side = max(1, int(math.isqrt(max(p, 1))))
+    is_img = pos < p
+    t = jnp.where(is_img, 0, pos - p)
+    hh = jnp.where(is_img, pos // side, pos - p)
+    ww = jnp.where(is_img, pos % side, pos - p)
+    ids = jnp.stack([t, hh, ww])                   # [3,S]
+    return jnp.broadcast_to(ids[:, None, :], (3, b, s))
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, s, kh, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kh, n_rep, hd)).reshape(
+        b, s, kh * n_rep, hd)
+
+
+def _masked_softmax(scores, mask):
+    scores = jnp.where(mask, scores, jnp.finfo(jnp.float32).min)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    e = jnp.where(mask, e, 0.0)
+    return e / (jnp.sum(e, axis=-1, keepdims=True) + 1e-30)
+
+
+def attention(q, k, v, *, causal: bool, window: int = 0,
+              q_offset=0, kv_len=None, chunk: int = 512, unroll: bool = False):
+    """Multi-head attention with GQA, causal & sliding-window masking.
+
+    q: [B,Sq,H,hd]; k,v: [B,Skv,KH,hd].  ``q_offset`` is the absolute
+    position of q[0] (prefill chunks / decode).  ``kv_len`` (scalar array
+    or None) masks out unwritten cache slots during decode.
+    For long sequences the q axis is processed in chunks via ``lax.map`` so
+    the score matrix never materializes at [Sq,Skv].
+    """
+    b, sq, h, hd = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    k = _repeat_kv(k, h // kh)
+    v = _repeat_kv(v, h // kh)
+    scale = 1.0 / math.sqrt(hd)
+    kv_pos = jnp.arange(skv)
+
+    def block(args):
+        qc, off = args                              # qc [B,Cq,H,hd]
+        cq = qc.shape[1]
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qc.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        q_pos = off + jnp.arange(cq)
+        mask = jnp.ones((cq, skv), dtype=bool)
+        if causal:
+            mask &= kv_pos[None, :] <= q_pos[:, None]
+        if window:
+            mask &= kv_pos[None, :] > q_pos[:, None] - window
+        if kv_len is not None:
+            mask &= kv_pos[None, :] < kv_len
+        w = _masked_softmax(scores, mask[None, None])
+        return jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+    if sq <= chunk:
+        return block((q, jnp.asarray(q_offset)))
+    assert sq % chunk == 0, (sq, chunk)
+    nc = sq // chunk
+    qs = q.reshape(b, nc, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    offs = jnp.asarray(q_offset) + jnp.arange(nc) * chunk
+    out = lax.scan(lambda _, x: (None, block(x)), None, (qs, offs),
+                   unroll=unroll or 1)[1]           # [nc,B,chunk,H,hd]
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# MoE: top-k token-choice routing with capacity (mesh-TF style dispatch)
+# ---------------------------------------------------------------------------
+
+
+def moe_dispatch(x, router_w, *, num_experts: int, k: int,
+                 capacity_factor: float, group_size: int):
+    """Compute capacity-limited dispatch/combine tensors.
+
+    x: [T,d] flat tokens.  Returns (dispatch [G,S,E,C] bool-ish float,
+    combine [G,S,E,C], aux_loss scalar, group shape).
+    """
+    t, d = x.shape
+    g = max(1, t // group_size)
+    s = t // g
+    xg = x[: g * s].reshape(g, s, d)
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                     # [G,S,E]
+    gate_vals, idx = lax.top_k(probs, k)                        # [G,S,K]
+    gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+
+    e = num_experts
+    cap = max(4, int(s * k / e * capacity_factor))
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)          # [G,S,K,E]
+    # priority order: token-major, then choice index
+    flat = onehot.reshape(g, s * k, e)
+    pos = jnp.cumsum(flat, axis=1) - 1.0                        # [G,S*K,E]
+    pos = pos.reshape(g, s, k, e)
+    keep = (pos < cap) & (onehot > 0)
+    pos = jnp.where(keep, pos, 0.0)
+    poh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+    poh = poh * keep[..., None]                                 # [G,S,K,E,C]
+    # contract the choice axis -> token-level dispatch/combine
+    disp = jnp.einsum("gske,gskec->gsec", onehot, poh)
+    comb = jnp.einsum("gske,gskec->gsec", onehot * gate_vals[..., None], poh)
+
+    # load-balance auxiliary loss (Switch/OLMoE style)
+    frac_tokens = jnp.mean(onehot[:, :, 0, :], axis=1)          # top-1 assignment
+    frac_probs = jnp.mean(probs, axis=1)
+    aux = e * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1))
+    return disp, comb, aux, (g, s, cap)
+
+
+def moe_ffn(x, params, *, num_experts: int, k: int, capacity_factor: float,
+            group_size: int):
+    """Top-k MoE SwiGLU ffn.  x: [T,d] -> [T,d], plus aux load-balance loss."""
+    t, d = x.shape
+    disp, comb, aux, (g, s, cap) = moe_dispatch(
+        x, params["router"], num_experts=num_experts, k=k,
+        capacity_factor=capacity_factor, group_size=group_size)
+    xg = x[: g * s].reshape(g, s, d)
+    ein = jnp.einsum("gsec,gsd->egcd", disp.astype(x.dtype), xg)
+    h = jnp.einsum("egcd,edf->egcf", ein, params["w1"])
+    hg = jnp.einsum("egcd,edf->egcf", ein, params["w3"])
+    h = silu(h) * hg
+    out = jnp.einsum("egcf,efd->egcd", h, params["w2"])
+    y = jnp.einsum("gsec,egcd->gsd", comb.astype(x.dtype), out)
+    y = y.reshape(g * s, d)
+    if g * s < t:   # ragged tail bypasses the MoE (residual passthrough)
+        y = jnp.concatenate([y, jnp.zeros((t - g * s, d), x.dtype)], axis=0)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (mamba)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x, w, b):
+    """x: [B,S,C]; w: [C,K]; depthwise causal conv + bias."""
+    k = w.shape[-1]
+    out = lax.conv_general_dilated(
+        x, w.T[:, None, :],                 # [K,1,C] -> spec below
+        window_strides=(1,), padding=[(k - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return out + b
+
+
+def conv1d_decode(x, state, w, b):
+    """Single-step depthwise conv.  x: [B,C]; state: [B,K-1,C] (oldest first)."""
+    k = w.shape[-1]
+    full = jnp.concatenate([state, x[:, None, :]], axis=1)      # [B,K,C]
+    out = jnp.einsum("bkc,ck->bc", full, w) + b
+    return out, full[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 selective scan (reference path; Pallas kernel in repro.kernels)
+# ---------------------------------------------------------------------------
+
+
+def selective_scan(u, dt, a, b_mat, c_mat, d_vec, *, chunk: int = 128,
+                   h0=None, return_state: bool = False):
+    """Mamba-1 scan.  u,dt: [B,S,D]; a: [D,N]; b_mat,c_mat: [B,S,N]; d_vec: [D].
+
+    h_t = exp(dt_t a) h_{t-1} + dt_t b_t u_t;  y_t = c_t . h_t + d u_t.
+    Chunked: lax.scan over chunks, associative_scan within a chunk, so peak
+    memory is O(B * chunk * D * N).
+    """
+    bsz, s, dim = u.shape
+    n = a.shape[-1]
+    if s % chunk:
+        chunk = s  # small sequences: single chunk
+    nc = s // chunk
+    # the [B,chunk,D,N] discretized tensors are built *inside* the chunk body
+    # so peak memory is O(B*chunk*D*N), never O(B*S*D*N).
+    dtf = dt.astype(jnp.float32).reshape(bsz, nc, chunk, dim)
+    uf = u.astype(jnp.float32).reshape(bsz, nc, chunk, dim)
+    bm = b_mat.astype(jnp.float32).reshape(bsz, nc, chunk, n)
+    cm = c_mat.astype(jnp.float32).reshape(bsz, nc, chunk, n)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    def chunk_step(h, inputs):
+        dt_c, u_c, b_c, c_c = inputs                # [B,chunk,D], [B,chunk,N]
+        da_c = jnp.exp(dt_c[..., None] * a)         # [B,chunk,D,N]
+        db_c = (dt_c * u_c)[..., None] * b_c[:, :, None, :]
+        acc_a, acc_b = lax.associative_scan(combine, (da_c, db_c), axis=1)
+        h_t = acc_a * h[:, None] + acc_b            # [B,chunk,D,N]
+        y = jnp.einsum("bldn,bln->bld", h_t, c_c)
+        return h_t[:, -1], y
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, dim, n), jnp.float32)
+    h_last, ys = lax.scan(chunk_step, h0,
+                          (dtf.transpose(1, 0, 2, 3),
+                           uf.transpose(1, 0, 2, 3),
+                           bm.transpose(1, 0, 2, 3),
+                           cm.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3).reshape(bsz, s, dim)
+    y = y + uf.reshape(bsz, s, dim) * d_vec
+    y = y.astype(u.dtype)
+    if return_state:
+        return y, h_last
+    return y
+
+
+def selective_scan_decode(u, dt, a, b_mat, c_mat, d_vec, h):
+    """One step.  u,dt: [B,D]; b_mat,c_mat: [B,N]; h: [B,D,N] -> (y, h')."""
+    dtf = dt.astype(jnp.float32)
+    da = jnp.exp(dtf[..., None] * a)                            # [B,D,N]
+    h = da * h + dtf[..., None] * b_mat[:, None, :] * u.astype(jnp.float32)[..., None]
+    y = jnp.einsum("bdn,bn->bd", h, c_mat.astype(jnp.float32))
+    y = y + u.astype(jnp.float32) * d_vec
+    return y.astype(u.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD, chunked dual form)
+# ---------------------------------------------------------------------------
+
+
+def ssd_scan(x, dt, a_log, b_mat, c_mat, *, chunk: int = 128,
+             h0=None, return_state: bool = False):
+    """Mamba-2 SSD.  x: [B,S,H,P]; dt: [B,S,H]; a_log: [H] (A = -exp(a_log));
+    b_mat, c_mat: [B,S,N] (single group).
+
+    h_t = exp(dt_t A_h) h_{t-1} + (dt_t x_t) outer b_t ;  y_t = h_t . c_t.
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    if s % chunk:
+        chunk = s
+    nc = s // chunk
+    # all O(chunk^2) intra-chunk tensors live *inside* the chunk body, so
+    # peak memory is O(B*chunk^2*H) not O(B*S*chunk*H).
+    dtf = dt.astype(jnp.float32).reshape(bsz, nc, chunk, h)
+    xr = x.astype(jnp.float32).reshape(bsz, nc, chunk, h, p)
+    bm = b_mat.astype(jnp.float32).reshape(bsz, nc, chunk, n)
+    cm = c_mat.astype(jnp.float32).reshape(bsz, nc, chunk, n)
+    a_neg = -jnp.exp(a_log.astype(jnp.float32))
+    iq = jnp.arange(chunk)
+    mask = (iq[:, None] >= iq[None, :])
+
+    def chunk_step(hc, inp):
+        dt_c, x_c, b_c, c_c = inp            # [B,Q,H], [B,Q,H,P], [B,Q,N]
+        la_cum = jnp.cumsum(dt_c * a_neg, axis=1)                # [B,Q,H]
+        xb = x_c * dt_c[..., None]                               # [B,Q,H,P]
+        # intra-chunk (attention-like)
+        cb = jnp.einsum("bin,bjn->bij", c_c, b_c)                # [B,Q,Q]
+        decay = la_cum[:, :, None, :] - la_cum[:, None, :, :]    # [B,i,j,H]
+        scores = cb[..., None] * jnp.exp(
+            jnp.where(mask[None, :, :, None], decay, -jnp.inf))
+        y_intra = jnp.einsum("bijh,bjhp->bihp", scores, xb)
+        # inter-chunk from the carried state
+        y_inter = jnp.einsum("bin,bih,bhnp->bihp", c_c,
+                             jnp.exp(la_cum), hc)
+        # update state
+        tail = la_cum[:, -1:, :] - la_cum                        # [B,Q,H]
+        sc = jnp.einsum("bjn,bjh,bjhp->bhnp", b_c, jnp.exp(tail), xb)
+        h_new = hc * jnp.exp(la_cum[:, -1])[:, :, None, None] + sc
+        return h_new, y_intra + y_inter
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    h_last, ys = lax.scan(chunk_step, h0,
+                          (dtf.transpose(1, 0, 2, 3),
+                           xr.transpose(1, 0, 2, 3, 4),
+                           bm.transpose(1, 0, 2, 3),
+                           cm.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, s, h, p).astype(x.dtype)
+    if return_state:
+        return y, h_last
+    return y
+
+
+def ssd_decode(x, dt, a_log, b_mat, c_mat, h):
+    """One step.  x: [B,H,P]; dt: [B,H]; b_mat,c_mat: [B,N]; h: [B,H,N,P]."""
+    a = jnp.exp(dt.astype(jnp.float32) * (-jnp.exp(a_log.astype(jnp.float32))))
+    xb = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+    h = h * a[:, :, None, None] + jnp.einsum("bn,bhp->bhnp",
+                                             b_mat.astype(jnp.float32), xb)
+    y = jnp.einsum("bhnp,bn->bhp", h, c_mat.astype(jnp.float32))
+    return y.astype(x.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# Cross entropy (reference; Pallas fused kernel in repro.kernels)
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits, labels):
+    """logits [..., V] fp-any, labels [...] int -> mean CE (fp32)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    picked = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)

@@ -1,0 +1,83 @@
+"""Minimal pure-JAX optimizers (pytree-based, optax-like but self-contained).
+
+``make_optimizer(name)`` returns ``(init_fn, update_fn)`` where
+``update_fn(grads, opt_state, params, lr) -> (new_params, new_opt_state)``.
+The learning rate is a traced scalar so schedules stay jit-friendly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import tree_zeros_like, global_norm
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def sgd():
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr):
+        new = jax.tree_util.tree_map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)
+                          ).astype(p.dtype), params, grads)
+        return new, state
+    return init, update
+
+
+def momentum(beta: float = 0.9):
+    def init(params):
+        return {"m": tree_zeros_like(params)}
+
+    def update(grads, state, params, lr):
+        m = jax.tree_util.tree_map(
+            lambda m_, g: beta * m_ + g.astype(m_.dtype), state["m"], grads)
+        new = jax.tree_util.tree_map(
+            lambda p, m_: (p.astype(jnp.float32) - lr * m_).astype(p.dtype),
+            params, m)
+        return new, {"m": m}
+    return init, update
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+    def init(params):
+        f32 = lambda t: jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), t)
+        return {"m": f32(params), "v": f32(params), "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        mh = jax.tree_util.tree_map(lambda m_: m_ / (1 - b1 ** t), m)
+        vh = jax.tree_util.tree_map(lambda v_: v_ / (1 - b2 ** t), v)
+        new = jax.tree_util.tree_map(
+            lambda p, m_, v_: (p.astype(jnp.float32)
+                               - lr * m_ / (jnp.sqrt(v_) + eps)).astype(p.dtype),
+            params, mh, vh)
+        return new, {"m": m, "v": v, "t": t}
+    return init, update
+
+
+OPTIMIZERS = {"sgd": sgd, "momentum": momentum, "adam": adam}
+
+
+def make_optimizer(name: str, **kw):
+    return OPTIMIZERS[name](**kw)
+
+
+def paper_lr_schedule(round_idx, lr0: float, decay_every: int = 10,
+                      decay: float = 0.99):
+    """Paper §VI-A: initial lr, decayed every `decay_every` rounds by `decay`."""
+    steps = round_idx // decay_every
+    return lr0 * decay ** steps.astype(jnp.float32) if hasattr(steps, "astype") \
+        else lr0 * decay ** steps

@@ -1,0 +1,231 @@
+"""Sharding policies: PartitionSpecs for params, state, batches and caches.
+
+Mesh axes (see launch/mesh.py):
+  - "pod"   : data parallel across pods (multi-pod mesh only)
+  - "data"  : federated-client axis (client stacks / batch) + FSDP for the
+              server stage in training
+  - "model" : tensor parallelism (heads / ffn / experts / state channels)
+
+Rules are *name-based* over the param-tree paths produced by
+``repro.models.model.init_params`` — explicit and auditable, rather than
+inferred from dimension sizes.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MODEL = "model"
+
+# name -> (spec for train/fsdp server params, spec for model-only params)
+#   position i of the spec corresponds to intrinsic dim i of the param
+#   (leading layer-stack / client-stack dims are prepended separately).
+_RULES = {
+    # attention
+    "wq":        (P("data", MODEL),   P(None, MODEL)),
+    "wk":        (P("data", MODEL),   P(None, MODEL)),
+    "wv":        (P("data", MODEL),   P(None, MODEL)),
+    "wo":        (P(MODEL, "data"),   P(MODEL, None)),
+    # mlp
+    "w1":        (P("data", MODEL),   P(None, MODEL)),
+    "w3":        (P("data", MODEL),   P(None, MODEL)),
+    "w2":        (P(MODEL, "data"),   P(MODEL, None)),
+    # moe (leading expert dim -> model axis = expert parallelism)
+    "router":    (P("data", None),    P(None, None)),
+    # mamba
+    "in_proj":   (P("data", MODEL),   P(None, MODEL)),
+    "x_proj":    (P(MODEL, None),     P(MODEL, None)),
+    "dt_w":      (P(None, MODEL),     P(None, MODEL)),
+    "conv_w":    (P(MODEL, None),     P(MODEL, None)),
+    "conv_b":    (P(MODEL,),          P(MODEL,)),
+    "a_log":     (P(MODEL,),          P(MODEL,)),        # overridden for 2D
+    "d_skip":    (P(MODEL,),          P(MODEL,)),
+    "dt_b":      (P(MODEL,),          P(MODEL,)),
+    "gate_ln":   (P(MODEL,),          P(MODEL,)),
+    "out_proj":  (P(MODEL, "data"),   P(MODEL, None)),
+    # embeddings / heads
+    "embed":     (P(MODEL, None),     P(MODEL, None)),
+    "head":      (P("data", MODEL),   P(None, MODEL)),
+    "frontend_w": (P(None, MODEL),    P(None, MODEL)),
+    # aux head
+    "down":      (P(None, None),      P(None, None)),
+    "up":        (P(None, MODEL),     P(None, MODEL)),
+}
+
+_MOE_EXPERT_PARAMS = {"w1", "w3", "w2"}
+
+
+def _divisible(dim: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    return dim % size == 0
+
+
+def _sanitize(spec: P, shape, mesh: Mesh) -> P:
+    """Drop axes that don't divide the dimension (tiny/odd params)."""
+    out = []
+    for i, s in enumerate(shape):
+        ax = spec[i] if i < len(spec) else None
+        out.append(ax if _divisible(s, mesh, ax) else None)
+    return P(*out)
+
+
+def param_spec(path, leaf, *, mesh: Mesh, fsdp: bool,
+               n_lead: int = 0, lead_axis=None, moe: bool = False) -> P:
+    """Spec for one param.  ``n_lead`` leading stack dims get ``lead_axis``
+    on dim 0 (client stack) / None (layer stack)."""
+    keys = [str(getattr(p, "key", "")) for p in path]
+    name = keys[-1]
+    rule = _RULES.get(name)
+    intrinsic_ndim = leaf.ndim - n_lead
+    if rule is None:
+        spec = P(*([None] * intrinsic_ndim))
+    else:
+        spec = rule[0] if fsdp else rule[1]
+    # MoE expert tensors carry a leading expert dim -> expert parallelism
+    if moe and name in _MOE_EXPERT_PARAMS and intrinsic_ndim == 3:
+        base = rule[0] if fsdp else rule[1]
+        # [E, d, f] / [E, f, d]: experts over model; drop model from inner
+        inner = tuple(a if a != MODEL else None for a in (base[0], base[1]))
+        spec = P(MODEL, *inner)
+    if len(spec) < intrinsic_ndim:
+        spec = P(*(tuple(spec) + (None,) * (intrinsic_ndim - len(spec))))
+    lead = [None] * n_lead
+    if n_lead and lead_axis is not None:
+        lead[0] = lead_axis
+    full = P(*(tuple(lead) + tuple(spec)))
+    return _sanitize(full, leaf.shape, mesh)
+
+
+def _is_moe_path(path) -> bool:
+    return any(str(getattr(p, "key", "")) == "moe" for p in path)
+
+
+def _stack_depth(path, client_stacked: bool) -> Tuple[int, Any]:
+    """How many leading stack dims a param has, given its path."""
+    keys = [str(getattr(p, "key", "")) for p in path]
+    n = 0
+    if "blocks" in keys:                # layer stack
+        n += 1
+    if "shared_attn" in keys:
+        n += 0
+    return n
+
+
+def tree_param_specs(params_abs, *, mesh: Mesh, fsdp: bool,
+                     client_axis=None):
+    """PartitionSpec tree mirroring an (abstract) param tree.
+
+    ``client_axis``: if set, every leaf is assumed stacked with a leading
+    client dim sharded over this axis.
+    """
+    def f(path, leaf):
+        keys = [str(getattr(p, "key", "")) for p in path]
+        n_lead = (1 if client_axis is not None else 0)
+        n_lead += (1 if "blocks" in keys else 0)
+        return param_spec(path, leaf, mesh=mesh, fsdp=fsdp, n_lead=n_lead,
+                          lead_axis=client_axis, moe=_is_moe_path(path))
+    return jax.tree_util.tree_map_with_path(f, params_abs)
+
+
+def cache_specs_tree(caches_abs, *, mesh: Mesh, batch_axis, seq_axis=MODEL,
+                     layout: str = "seq"):
+    """Decode/prefill cache specs.
+
+    Attention caches [L, B, S, KH, hd]: batch over ``batch_axis``; then
+
+    - ``layout="seq"``: the cache *sequence* dim over the model axis.
+      CAVEAT (found in §Perf): the decode write is a dynamic-update-slice
+      at a traced position INTO the sharded seq dim, which GSPMD can only
+      realize by all-gathering the cache — 2 x cache_bytes of collective
+      per layer per step.
+    - ``layout="hd"``: head_dim over the model axis (kv_heads is often
+      < 16 so the head dim itself cannot take the axis).  The seq dim
+      stays local, the DUS is local, and attention contracts the sharded
+      hd with a small partial-sum all-reduce of the score stats.
+
+    SSM states shard their channel/head dim over model.
+    """
+    def f(path, leaf):
+        keys = [str(getattr(p, "key", "")) for p in path]
+        name = keys[-1]
+        if name in ("k", "v"):           # [L, B, S, KH, hd]
+            if layout == "hd":
+                spec = P(None, batch_axis, None, None, MODEL)
+            elif layout == "kvh":
+                # kv heads over model: attention is fully local per head —
+                # requires kv_heads % mesh.model == 0 (serve on a mesh
+                # reshaped so the model axis divides kv_heads, e.g. 32x8)
+                spec = P(None, batch_axis, None, MODEL, None)
+            else:
+                spec = P(None, batch_axis, seq_axis, None, None)
+        elif name == "conv":             # [L, B, K-1, C]
+            spec = P(None, batch_axis, None, MODEL)
+        elif name == "ssm":              # [L,B,din,N] or [L,B,H,N,P]
+            spec = P(*((None, batch_axis, MODEL) + (None,) * (leaf.ndim - 3)))
+        else:
+            spec = P(*([None] * leaf.ndim))
+        return _sanitize(spec, leaf.shape, mesh)
+    return jax.tree_util.tree_map_with_path(f, caches_abs)
+
+
+def with_shardings(tree_abs, spec_tree, mesh: Mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct tree (dry-run inputs)."""
+    return jax.tree_util.tree_map(
+        lambda sds, spec: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, spec)),
+        tree_abs, spec_tree)
+
+
+def batch_axes(mesh: Mesh):
+    """The composite data-parallel axis tuple present in this mesh."""
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+# ---------------------------------------------------------------------------
+# Whole-state / batch spec builders (used by the launchers & dry-run)
+# ---------------------------------------------------------------------------
+
+
+def state_specs(state_abs, *, mesh: Mesh, fsdp_server: bool):
+    """PartitionSpec tree for a CSE-FSL round state.
+
+    clients.*   : leading client-stack dim over the composite batch axes,
+                  intrinsic dims per the TP rules (model axis).
+    server.*    : FSDP x TP (``fsdp_server``) or TP-only.
+    Optimizer trees mirror the param trees (same leaf names), so the same
+    name-based rules apply.
+    """
+    baxis = batch_axes(mesh)
+    out = {}
+    if "clients" in state_abs:
+        out["clients"] = tree_param_specs(
+            state_abs["clients"], mesh=mesh, fsdp=False, client_axis=baxis)
+    for key in ("server", "servers"):
+        if key in state_abs:
+            out[key] = tree_param_specs(
+                state_abs[key], mesh=mesh, fsdp=fsdp_server,
+                client_axis=baxis if key == "servers" else None)
+    if "round" in state_abs:
+        out["round"] = P()
+    return out
+
+
+def lead_batch_spec(tree_abs, *, mesh: Mesh):
+    """Shard dim0 of every leaf over the composite batch axes."""
+    baxis = batch_axes(mesh)
+
+    def f(leaf):
+        spec = P(*((baxis,) + (None,) * (leaf.ndim - 1)))
+        return _sanitize(spec, leaf.shape, mesh)
+    return jax.tree_util.tree_map(f, tree_abs)
+
+
+def params_specs(params_abs, *, mesh: Mesh, fsdp: bool):
+    """Spec tree for a merged {client, aux, server} param tree (serving)."""
+    return tree_param_specs(params_abs, mesh=mesh, fsdp=fsdp, client_axis=None)

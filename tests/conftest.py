@@ -1,0 +1,24 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the single real CPU device; only repro.launch.dryrun forces 512."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import FSLConfig, SHAPES
+
+
+@pytest.fixture(scope="session")
+def tiny_shape():
+    return dataclasses.replace(SHAPES["train_4k"], seq_len=32, global_batch=4)
+
+
+@pytest.fixture(scope="session")
+def fsl2():
+    return FSLConfig(num_clients=2, h=1)
+
+
+@pytest.fixture(autouse=True)
+def _seed():
+    np.random.seed(0)

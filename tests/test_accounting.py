@@ -1,0 +1,121 @@
+"""Table II communication/storage accounting: analytic identities +
+hypothesis property tests over the paper's cost model."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.accounting import (CommMeter, CostModel, comm_one_epoch,
+                                   meter_aggregation, meter_round,
+                                   server_storage, total_storage)
+
+cms = st.builds(
+    CostModel,
+    n=st.integers(1, 64),
+    q=st.integers(1, 1 << 20),
+    d_local=st.integers(1, 10_000),
+    w_client=st.integers(1, 1 << 24),
+    w_server=st.integers(1, 1 << 26),
+    aux=st.integers(1, 1 << 20),
+)
+
+
+@settings(max_examples=200, deadline=None)
+@given(cms, st.integers(1, 64))
+def test_cse_fsl_h_divides_smashed_traffic(cm, h):
+    """Table II row 3: CSE-FSL's smashed uplink is exactly 1/h of FSL_AN's."""
+    an = comm_one_epoch(cm, "fsl_an")
+    cse = comm_one_epoch(cm, "cse_fsl", h=h)
+    assert cse["uplink_smashed"] == an["uplink_smashed"] // h
+    assert cse["downlink_grads"] == 0
+    assert cse["model_sync"] == an["model_sync"]
+
+
+@settings(max_examples=200, deadline=None)
+@given(cms)
+def test_an_halves_mc_streaming_traffic(cm):
+    """Table II rows 1-2: FSL_AN removes the gradient downlink (q|D| per
+    client), i.e. its streaming traffic is half of FSL_MC's."""
+    mc = comm_one_epoch(cm, "fsl_mc")
+    an = comm_one_epoch(cm, "fsl_an")
+    assert mc["downlink_grads"] == mc["uplink_smashed"]
+    assert an["downlink_grads"] == 0
+    assert an["uplink_smashed"] == mc["uplink_smashed"]
+
+
+@settings(max_examples=200, deadline=None)
+@given(cms, st.integers(1, 64))
+def test_total_is_sum_of_parts(cm, h):
+    for method in ("fsl_mc", "fsl_oc", "fsl_an", "cse_fsl"):
+        c = comm_one_epoch(cm, method, h=h)
+        assert c["total"] == (c["uplink_smashed"] + c["uplink_labels"]
+                              + c["downlink_grads"] + c["model_sync"])
+
+
+@settings(max_examples=200, deadline=None)
+@given(cms, st.integers(2, 64))
+def test_cse_storage_independent_of_n(cm, n2):
+    """Table II last column: CSE-FSL server storage does not scale with n."""
+    import dataclasses
+    cm2 = dataclasses.replace(cm, n=cm.n * n2)
+    assert server_storage(cm, "cse_fsl") == server_storage(cm2, "cse_fsl")
+    # while the baselines DO scale
+    assert server_storage(cm2, "fsl_mc") == n2 * server_storage(cm, "fsl_mc")
+    assert server_storage(cm2, "fsl_an") == n2 * server_storage(cm, "fsl_an")
+    # fsl_oc is also constant (but has no aux and converges poorly, §VI-B)
+    assert server_storage(cm, "fsl_oc") == cm.w_server
+    assert server_storage(cm, "cse_fsl") == cm.w_server + cm.aux
+
+
+@settings(max_examples=100, deadline=None)
+@given(cms, st.integers(1, 16))
+def test_cse_h_monotone(cm, h):
+    """Larger h never increases total communication (paper §VI-D)."""
+    prev = comm_one_epoch(cm, "cse_fsl", h=h)["total"]
+    nxt = comm_one_epoch(cm, "cse_fsl", h=h + 1)["total"]
+    assert nxt <= prev
+
+
+@settings(max_examples=100, deadline=None)
+@given(cms)
+def test_storage_ordering_matches_table5(cm):
+    """§VI-E: FSL_OC <= CSE_FSL <= FSL_MC <= FSL_AN in total storage."""
+    oc = total_storage(cm, "fsl_oc")
+    cse = total_storage(cm, "cse_fsl")
+    mc = total_storage(cm, "fsl_mc")
+    an = total_storage(cm, "fsl_an")
+    assert oc <= cse
+    assert cse <= an
+    assert mc <= an
+
+
+@settings(max_examples=50, deadline=None)
+@given(cms, st.integers(1, 8), st.integers(1, 20), st.integers(1, 256))
+def test_meter_matches_analytic_for_cse(cm, h, rounds_per_epoch, bs):
+    """Driving the runtime meter for one epoch reproduces the analytic
+    Table II row (with |D| = rounds * h * batch)."""
+    import dataclasses
+    d_local = rounds_per_epoch * h * bs
+    cm = dataclasses.replace(cm, d_local=d_local)
+    meter = CommMeter()
+    for _ in range(rounds_per_epoch):
+        # one CSE-FSL round = h local batches per client, one upload each
+        for _client in range(cm.n):
+            meter.log("uplink_smashed", cm.q * bs)
+            meter.log("uplink_labels", cm.label_bytes * bs)
+    meter_aggregation(meter, cm, "cse_fsl")
+    analytic = comm_one_epoch(cm, "cse_fsl", h=h)
+    # the meter uploads one batch per round; analytic is |D|/h samples
+    assert meter.counts["uplink_smashed"] == analytic["uplink_smashed"]
+    assert meter.counts["model_sync"] == analytic["model_sync"]
+
+
+def test_meter_round_kinds():
+    cm = CostModel(n=2, q=100, d_local=40, w_client=1000, w_server=5000,
+                   aux=50)
+    m = CommMeter()
+    meter_round(m, cm, "fsl_mc", h=3, batch_size=10)
+    assert m.counts["uplink_smashed"] == 3 * 100 * 10
+    assert m.counts["downlink_grads"] == 3 * 100 * 10
+    m2 = CommMeter()
+    meter_round(m2, cm, "cse_fsl", h=3, batch_size=10)
+    assert m2.counts["uplink_smashed"] == 100 * 10
+    assert m2.counts["downlink_grads"] == 0
