@@ -16,7 +16,7 @@ from benchmarks.common import banner, save, table
 from repro.common import global_norm
 from repro.configs.base import FSLConfig
 from repro.core.bundle import cnn_bundle
-from repro.core.protocol import Trainer, merged_params
+from repro.core.trainer import Trainer
 from repro.data import FederatedBatcher, partition_iid, \
     synthetic_classification
 from repro.models import cnn as cnn_mod
@@ -51,10 +51,9 @@ def run(order: str, rounds: int = 6, n: int = 4, h: int = 2, seed: int = 0):
                                                       state["clients"])
             inputs = jax.tree_util.tree_map(lambda a: a[perm], inputs)
             labels = labels[perm]
-        state, m = trainer._round(state, (inputs, labels),
-                                  trainer.lr_at(rnd))
-        state = trainer._agg(state)
-    params = merged_params(state)
+        state, m = trainer.step(state, (inputs, labels), rnd=rnd)
+        state = trainer.aggregate(state)
+    params = trainer.merged_params(state)
     return accuracy(params, xt, yt), state["server"]["params"]
 
 

@@ -15,7 +15,7 @@ from benchmarks.common import banner, save, table
 from repro.common import count_params
 from repro.configs.base import FSLConfig
 from repro.core.bundle import cnn_bundle
-from repro.core.protocol import Trainer, merged_params
+from repro.core.trainer import Trainer
 from repro.data import FederatedBatcher, partition_iid, \
     synthetic_classification
 from repro.models import cnn as cnn_mod
@@ -42,15 +42,9 @@ def run_variant(base_cfg, aux_kind: str, channels: int, h: int,
     trainer = Trainer(bundle, fsl, donate=False)
     state = trainer.init(seed)
     batcher = FederatedBatcher(fed, 20, h, seed=seed)
-    for rnd in range(rounds):
-        b = batcher.next_round()
-        state, _ = trainer._round(state, (jnp.asarray(b[0]),
-                                          jnp.asarray(b[1])),
-                                  trainer.lr_at(rnd))
-        state = trainer._agg(state)
-    aux_params = count_params(jax.tree_util.tree_map(
-        lambda a: a[0], state["clients"]["params"])["aux"])
-    return accuracy(cfg, merged_params(state), xt, yt), aux_params
+    state, _ = trainer.run(state, batcher, rounds)
+    merged = trainer.merged_params(state)
+    return accuracy(cfg, merged, xt, yt), count_params(merged["aux"])
 
 
 def sweep(base_cfg, name: str, channel_list, h: int):

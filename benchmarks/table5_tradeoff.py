@@ -1,8 +1,10 @@
 """Paper Table V / Fig. 9: accuracy x communication load x storage.
 
-Runs every method to a fixed round budget on the paper's CIFAR-10 CNN,
-metering *measured* communication bytes and reporting Table II storage —
-one comprehensive trade-off table, like the paper's Table V.
+Runs every method to a fixed round budget on the paper's CIFAR-10 CNN
+through the one shared `Trainer.run` loop, metering *measured*
+communication bytes via each method's declarative CommProfile and
+reporting its Table II storage — one comprehensive trade-off table, like
+the paper's Table V.
 """
 from __future__ import annotations
 
@@ -12,11 +14,9 @@ import jax.numpy as jnp
 from benchmarks.common import banner, save, table
 from repro.common import bytes_of
 from repro.configs.base import FSLConfig
-from repro.core import baselines
-from repro.core.accounting import CommMeter, CostModel, meter_aggregation, \
-    meter_round, total_storage
+from repro.core.accounting import CommMeter, CostModel
 from repro.core.bundle import cnn_bundle
-from repro.core.protocol import Trainer, merged_params
+from repro.core.trainer import Trainer
 from repro.data import FederatedBatcher, partition_iid, \
     synthetic_classification
 from repro.models import cnn as cnn_mod
@@ -47,65 +47,31 @@ def main():
 
     rows = []
 
-    def baseline_run(method):
-        fsl = FSLConfig(num_clients=N, h=1, lr=0.05,
+    def run(method: str, h: int):
+        fsl = FSLConfig(num_clients=N, h=h, lr=0.05, method=method,
+                        lr_decay=1.0,
                         grad_clip=1.0 if method == "fsl_oc" else 0.0)
-        state = baselines.init_state(bundle, fsl, jax.random.PRNGKey(0),
-                                     method)
-        step = jax.jit(baselines.STEPS[method](bundle, fsl))
-        agg = jax.jit(baselines.make_aggregate(method))
-        batcher = FederatedBatcher(fed, BS, 1, seed=0)
-        meter = CommMeter()
-        for rnd in range(ROUNDS):
-            b = batcher.next_round()
-            state, _ = step(state, (jnp.asarray(b[0][:, 0]),
-                                    jnp.asarray(b[1][:, 0])), 0.05)
-            state = agg(state)
-            for _ in range(N):
-                meter_round(meter, cm, method, 1, BS)
-            meter_aggregation(meter, cm, method)
-        if "servers" in state:
-            sp = jax.tree_util.tree_map(lambda a: a[0],
-                                        state["servers"]["params"])
-        else:
-            sp = state["server"]["params"]
-        cp = jax.tree_util.tree_map(lambda a: a[0], state["clients"]["params"])
-        cp = cp.get("params", cp)
-        acc = accuracy({"client": cp, "server": sp}, xt, yt)
-        rows.append({"method": method, "acc": round(acc, 4),
-                     "batches": ROUNDS,
-                     "load_MiB": round(meter.total / 2 ** 20, 2),
-                     "load_per_batch_MiB": round(
-                         meter.total / 2 ** 20 / ROUNDS, 3),
-                     "storage_Mparams": round(
-                         total_storage(cm, method) / 4 / 1e6, 3)})
-
-    for method in ("fsl_mc", "fsl_oc", "fsl_an"):
-        baseline_run(method)
-
-    for h in (5, 10):
-        fsl = FSLConfig(num_clients=N, h=h, lr=0.05)
         trainer = Trainer(bundle, fsl, donate=False)
         state = trainer.init()
         batcher = FederatedBatcher(fed, BS, h, seed=0)
         meter = CommMeter()
-        for rnd in range(ROUNDS):
-            b = batcher.next_round()
-            state, _ = trainer._round(state, (jnp.asarray(b[0]),
-                                              jnp.asarray(b[1])),
-                                      trainer.lr_at(rnd))
-            state = trainer._agg(state)
-            for _ in range(N):
-                meter_round(meter, cm, "cse_fsl", h, BS)
-            meter_aggregation(meter, cm, "cse_fsl")
-        acc = accuracy(merged_params(state), xt, yt)
-        rows.append({"method": f"cse_fsl_h{h}", "acc": round(acc, 4),
+        state, _ = trainer.run(state, batcher, ROUNDS, meter=meter,
+                               cost_model=cm)
+        acc = accuracy(trainer.merged_params(state), xt, yt)
+        profile = trainer.comm_profile(cm, BS)
+        label = f"cse_fsl_h{h}" if method == "cse_fsl" else method
+        rows.append({"method": label, "acc": round(acc, 4),
                      "batches": ROUNDS * h,
                      "load_MiB": round(meter.total / 2 ** 20, 2),
                      "load_per_batch_MiB": round(
                          meter.total / 2 ** 20 / (ROUNDS * h), 3),
                      "storage_Mparams": round(
-                         total_storage(cm, "cse_fsl") / 4 / 1e6, 3)})
+                         profile.total_storage / 4 / 1e6, 3)})
+
+    for method in ("fsl_mc", "fsl_oc", "fsl_an"):
+        run(method, h=1)
+    for h in (5, 10):
+        run("cse_fsl", h=h)
 
     banner(f"Table V — accuracy / load / storage ({ROUNDS} rounds, "
            f"{N} clients; CSE trains h batches per round)")
@@ -117,8 +83,10 @@ def main():
     # training, CSE's communication is a fraction of FSL_AN's.
     assert by["cse_fsl_h5"]["storage_Mparams"] < by["fsl_an"]["storage_Mparams"]
     assert by["cse_fsl_h5"]["storage_Mparams"] < by["fsl_mc"]["storage_Mparams"]
-    assert by["cse_fsl_h5"]["load_per_batch_MiB"]         < 0.5 * by["fsl_an"]["load_per_batch_MiB"]
-    assert by["cse_fsl_h10"]["load_per_batch_MiB"]         < by["cse_fsl_h5"]["load_per_batch_MiB"]
+    assert by["cse_fsl_h5"]["load_per_batch_MiB"] \
+        < 0.5 * by["fsl_an"]["load_per_batch_MiB"]
+    assert by["cse_fsl_h10"]["load_per_batch_MiB"] \
+        < by["cse_fsl_h5"]["load_per_batch_MiB"]
     save("table5_tradeoff", {"rows": rows})
     return rows
 

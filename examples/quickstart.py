@@ -1,8 +1,10 @@
-"""Quickstart: CSE-FSL in ~60 lines.
+"""Quickstart: CSE-FSL in ~50 lines.
 
 Trains the paper's CIFAR-10 split CNN with the CSE-FSL protocol (auxiliary
 head + h-periodic smashed upload + single server model) on synthetic data,
-printing loss and the Table II communication meter.
+printing loss and the Table II communication meter.  Swap ``method=`` in
+the FSLConfig for any registered method ("fsl_mc", "fsl_oc", "fsl_an") —
+the Trainer, metering, and evaluation code below stay identical.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,10 +13,9 @@ import jax.numpy as jnp
 
 from repro.common import bytes_of
 from repro.configs.base import FSLConfig
-from repro.core.accounting import CommMeter, CostModel, meter_aggregation, \
-    meter_round
+from repro.core.accounting import CommMeter, CostModel
 from repro.core.bundle import cnn_bundle
-from repro.core.protocol import Trainer, merged_params
+from repro.core.trainer import Trainer
 from repro.data import FederatedBatcher, partition_iid, \
     synthetic_classification
 from repro.models import cnn as cnn_mod
@@ -33,11 +34,12 @@ def main():
     batcher = FederatedBatcher(fed, batch, h)
 
     # 3. the protocol: h local steps per round, single server model
-    fsl = FSLConfig(num_clients=n_clients, h=h, lr=0.15)  # paper CIFAR-10 lr
+    fsl = FSLConfig(num_clients=n_clients, h=h, lr=0.15,  # paper CIFAR-10 lr
+                    method="cse_fsl")
     trainer = Trainer(bundle, fsl, donate=False)
     state = trainer.init(seed=0)
 
-    # 4. Table II communication meter
+    # 4. Table II communication meter, driven by the method's CommProfile
     pa = jax.eval_shape(bundle.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
     cm = CostModel(n=n_clients, q=bundle.smashed_bytes_per_sample,
                    d_local=len(x) // n_clients,
@@ -45,22 +47,16 @@ def main():
                    w_server=bytes_of(pa["server"]), aux=bytes_of(pa["aux"]))
     meter = CommMeter()
 
-    for rnd in range(10):
-        b = batcher.next_round()
-        state, m = trainer._round(state, (jnp.asarray(b[0]),
-                                          jnp.asarray(b[1])),
-                                  trainer.lr_at(rnd))
-        state = trainer._agg(state)
-        for _ in range(n_clients):
-            meter_round(meter, cm, "cse_fsl", h, batch)
-        meter_aggregation(meter, cm, "cse_fsl")
-        if (rnd + 1) % 2 == 0:
-            print(f"round {rnd + 1:3d}  client_loss={m['client_loss']:.4f}  "
-                  f"server_loss={m['server_loss']:.4f}  "
-                  f"comm={meter.total / 2 ** 20:.1f} MiB")
+    def report(rnd, m, _state):
+        print(f"round {rnd:3d}  client_loss={m['client_loss']:.4f}  "
+              f"server_loss={m['server_loss']:.4f}  "
+              f"comm={meter.total / 2 ** 20:.1f} MiB")
+
+    state, _ = trainer.run(state, batcher, 10, log_every=2, callback=report,
+                           meter=meter, cost_model=cm)
 
     # 5. the deployed model = aggregated client stage + server stage
-    params = merged_params(state)
+    params = trainer.merged_params(state)
     xt, yt = synthetic_classification(400, CIFAR10.in_shape, 10, seed=9,
                                       signal=12.0)
     sm = cnn_mod.client_forward(CIFAR10, params["client"], jnp.asarray(xt))

@@ -18,12 +18,9 @@ import numpy as np
 from repro.common import bytes_of, count_params
 from repro.configs.base import FSLConfig
 from repro.configs.registry import get_config
-from repro.core.accounting import CommMeter, CostModel, meter_aggregation, \
-    meter_round
+from repro.core.accounting import CommMeter, CostModel
 from repro.core.bundle import transformer_bundle
-from repro.core.protocol import Trainer
-from repro.data import FederatedBatcher, FederatedData, partition_dirichlet, \
-    synthetic_lm
+from repro.core.trainer import Trainer
 from repro.launch.train import LMBatcher, build_data
 from repro.models.model import abstract_params
 
@@ -68,23 +65,19 @@ def main():
     trainer = Trainer(bundle, fsl)
     state = trainer.init(seed=0)
     t0 = time.time()
-    first_loss = None
-    for rnd in range(args.rounds):
-        batch = batcher.next_round()
-        state, m = trainer._round(state, batch, trainer.lr_at(rnd))
-        state = trainer._agg(state)
-        for _ in range(args.clients):
-            meter_round(meter, cm, "cse_fsl", args.h, args.batch)
-        meter_aggregation(meter, cm, "cse_fsl")
-        if rnd == 0:
-            first_loss = float(m["client_loss"])
-        if (rnd + 1) % 20 == 0:
-            print(f"round {rnd + 1:4d}  "
-                  f"client_loss={float(m['client_loss']):.4f}  "
-                  f"server_loss={float(m['server_loss']):.4f}  "
+
+    def report(rnd, m, _state):
+        if rnd % 20 == 0:
+            print(f"round {rnd:4d}  "
+                  f"client_loss={m['client_loss']:.4f}  "
+                  f"server_loss={m['server_loss']:.4f}  "
                   f"comm={meter.total / 2 ** 20:.0f} MiB  "
-                  f"({(time.time() - t0) / (rnd + 1):.2f}s/round)")
-    last_loss = float(m["client_loss"])
+                  f"({(time.time() - t0) / rnd:.2f}s/round)")
+
+    state, history = trainer.run(state, batcher, args.rounds, log_every=1,
+                                 callback=report, meter=meter, cost_model=cm)
+    first_loss = history[0]["client_loss"]
+    last_loss = history[-1]["client_loss"]
     print(f"\n{args.rounds} rounds x h={args.h} batches: "
           f"loss {first_loss:.3f} -> {last_loss:.3f}; "
           f"total comm {meter.total / 2 ** 20:.0f} MiB "

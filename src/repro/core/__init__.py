@@ -1,3 +1,11 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+#
+# Public API: the FSLMethod registry + the method-agnostic Trainer.
+from repro.core.methods import (CommProfile, FSLMethod, available_methods,
+                                get_method, register)
+from repro.core.trainer import Trainer
+
+__all__ = ["CommProfile", "FSLMethod", "available_methods", "get_method",
+           "register", "Trainer"]

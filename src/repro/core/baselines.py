@@ -1,194 +1,27 @@
-"""Baseline FSL methods from the paper's experiment section (§VI-A).
+"""Compatibility shim — the baseline methods moved to
+``repro.core.methods.{fsl_mc,fsl_oc,fsl_an}`` behind the `FSLMethod` API.
+Import ``repro.core.methods.get_method(name)`` in new code.
 
-- FSL_MC  [SplitFed]: per-client server replicas; per-batch smashed upload
-  *and* per-batch gradient download (end-to-end backprop through the cut).
-- FSL_OC  [SplitFed]: one shared server model updated sequentially; clients
-  still wait for cut-layer gradients; gradient clipping for stability.
-- FSL_AN  [Han et al.]: auxiliary network (local client update, no gradient
-  download) but per-client server replicas and per-batch smashed upload.
-
-All are expressed as one jittable "batch step" over stacked clients so they
-run under the same Trainer/mesh machinery as CSE-FSL.  For these baselines
-one round = one mini-batch (h = 1 by construction).
+NOTE: the per-batch step builders exposed here (``STEPS``) consume one
+mini-batch ``[n, B, ...]``; the registered methods' ``make_round_step``
+consume the unified ``[n, h, B, ...]`` round contract instead.
 """
-from __future__ import annotations
-
-from typing import Any, Dict
-
-import jax
-import jax.numpy as jnp
-from jax import lax
-
-from repro.configs.base import FSLConfig
-from repro.core.bundle import SplitModelBundle
-from repro.optim import clip_by_global_norm, make_optimizer
-
-# ---------------------------------------------------------------------------
-# Shared state builders
-# ---------------------------------------------------------------------------
+from repro.core.methods import get_method
+from repro.core.methods.fsl_an import make_batch_step as make_fsl_an_step
+from repro.core.methods.fsl_mc import make_batch_step as make_fsl_mc_step
+from repro.core.methods.fsl_oc import make_batch_step as make_fsl_oc_step
 
 
-def _stack(tree, n):
-    return jax.tree_util.tree_map(
-        lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(), tree)
-
-
-def init_state(bundle: SplitModelBundle, fsl: FSLConfig, key,
-               method: str) -> Dict[str, Any]:
-    params = bundle.init(key)
-    opt_init, _ = make_optimizer(fsl.optimizer)
-    n = fsl.num_clients
-    if method == "fsl_mc":
-        client = params["client"]
-        server = _stack(params["server"], n)
-        opt_c, opt_s = opt_init(client), opt_init(server)
-        return {"clients": {"params": _stack(client, n),
-                            "opt": _stack(opt_c, n)},
-                "servers": {"params": server, "opt": _stack(opt_init(
-                    params["server"]), n)},
-                "round": jnp.zeros((), jnp.int32)}
-    if method == "fsl_oc":
-        client = params["client"]
-        return {"clients": {"params": _stack(client, n),
-                            "opt": _stack(opt_init(client), n)},
-                "server": {"params": params["server"],
-                           "opt": opt_init(params["server"])},
-                "round": jnp.zeros((), jnp.int32)}
-    if method == "fsl_an":
-        client = {"params": params["client"], "aux": params["aux"]}
-        return {"clients": {"params": _stack(client, n),
-                            "opt": _stack(opt_init(client), n)},
-                "servers": {"params": _stack(params["server"], n),
-                            "opt": _stack(opt_init(params["server"]), n)},
-                "round": jnp.zeros((), jnp.int32)}
-    raise ValueError(method)
-
-
-# ---------------------------------------------------------------------------
-# FSL_MC: end-to-end split backprop, per-client server replica
-# ---------------------------------------------------------------------------
-
-
-def make_fsl_mc_step(bundle: SplitModelBundle, fsl: FSLConfig):
-    _, opt_update = make_optimizer(fsl.optimizer)
-
-    def per_client(cstate, sstate, inputs, labels, lr):
-        def loss_fn(cp, sp):
-            return bundle.e2e_loss(cp, sp, inputs, labels)
-        loss, (gc, gs) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
-            cstate["params"], sstate["params"])
-        cp, copt = opt_update(gc, cstate["opt"], cstate["params"], lr)
-        sp, sopt = opt_update(gs, sstate["opt"], sstate["params"], lr)
-        return ({"params": cp, "opt": copt}, {"params": sp, "opt": sopt}, loss)
-
-    def step(state, batch, lr):
-        inputs, labels = batch      # leading [n, B, ...]
-        cs, ss, loss = jax.vmap(per_client, in_axes=(0, 0, 0, 0, None))(
-            state["clients"], state["servers"], inputs, labels, lr)
-        return ({"clients": cs, "servers": ss, "round": state["round"] + 1},
-                {"loss": jnp.mean(loss)})
-    return step
-
-
-# ---------------------------------------------------------------------------
-# FSL_OC: one server copy, sequential updates, gradient download to clients
-# ---------------------------------------------------------------------------
-
-
-def make_fsl_oc_step(bundle: SplitModelBundle, fsl: FSLConfig):
-    _, opt_update = make_optimizer(fsl.optimizer)
-    clip = fsl.grad_clip or 1.0
-
-    def step(state, batch, lr):
-        inputs, labels = batch
-
-        # 1) client forwards (parallel)
-        def fwd(cp, x):
-            return bundle.client_smashed(cp, x)
-        smashed = jax.vmap(fwd)(state["clients"]["params"], inputs)
-
-        # 2) server: sequential scan over client arrivals; also emit the
-        #    cut-layer gradient for each client's backprop (the downlink).
-        def one(carry, xs):
-            params, opt = carry
-            sm, lb = xs
-            loss, (gs, gsm) = jax.value_and_grad(
-                bundle.server_loss, argnums=(0, 1))(params, sm, lb)
-            gs, _ = clip_by_global_norm(gs, clip)
-            params, opt = opt_update(gs, opt, params, lr)
-            return (params, opt), (gsm, loss)
-
-        (sp, sopt), (gsm, losses) = lax.scan(
-            one, (state["server"]["params"], state["server"]["opt"]),
-            (smashed, labels))
-
-        # 3) client backward with the downloaded cut gradients (parallel)
-        def bwd(cstate, x, g):
-            def smash_fn(p):
-                return bundle.client_smashed(p, x)
-            _, vjp = jax.vjp(smash_fn, cstate["params"])
-            (gc,) = vjp(g)
-            gc, _ = clip_by_global_norm(gc, clip)
-            cp, copt = opt_update(gc, cstate["opt"], cstate["params"], lr)
-            return {"params": cp, "opt": copt}
-        cs = jax.vmap(bwd, in_axes=(0, 0, 0))(state["clients"], inputs, gsm)
-
-        return ({"clients": cs, "server": {"params": sp, "opt": sopt},
-                 "round": state["round"] + 1},
-                {"loss": jnp.mean(losses)})
-    return step
-
-
-# ---------------------------------------------------------------------------
-# FSL_AN: auxiliary network + per-client server replicas, per-batch upload
-# ---------------------------------------------------------------------------
-
-
-def make_fsl_an_step(bundle: SplitModelBundle, fsl: FSLConfig):
-    _, opt_update = make_optimizer(fsl.optimizer)
-
-    def per_client(cstate, sstate, inputs, labels, lr):
-        # local (aux) update — no gradient wait
-        (closs, _), gc = jax.value_and_grad(
-            lambda pr: bundle.client_loss(pr["params"], pr["aux"],
-                                          inputs, labels),
-            has_aux=True)(cstate["params"])
-        cp, copt = opt_update(gc, cstate["opt"], cstate["params"], lr)
-        # per-batch smashed upload with the updated client model
-        smashed = lax.stop_gradient(bundle.client_smashed(cp["params"], inputs))
-        sloss, gs = jax.value_and_grad(bundle.server_loss)(
-            sstate["params"], smashed, labels)
-        sp, sopt = opt_update(gs, sstate["opt"], sstate["params"], lr)
-        return ({"params": cp, "opt": copt}, {"params": sp, "opt": sopt},
-                closs, sloss)
-
-    def step(state, batch, lr):
-        inputs, labels = batch
-        cs, ss, closs, sloss = jax.vmap(per_client, in_axes=(0, 0, 0, 0, None))(
-            state["clients"], state["servers"], inputs, labels, lr)
-        return ({"clients": cs, "servers": ss, "round": state["round"] + 1},
-                {"client_loss": jnp.mean(closs), "server_loss": jnp.mean(sloss)})
-    return step
-
-
-# ---------------------------------------------------------------------------
-# Aggregation (shared): FedAvg every stacked axis present in the state
-# ---------------------------------------------------------------------------
+def init_state(bundle, fsl, key, method: str):
+    return get_method(method).init_state(bundle, fsl, key)
 
 
 def make_aggregate(method: str):
-    def avg(x):
-        m = jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True)
-        return jnp.broadcast_to(m, x.shape).astype(x.dtype)
-
-    def aggregate(state):
-        out = dict(state)
-        out["clients"] = jax.tree_util.tree_map(avg, state["clients"])
-        if method in ("fsl_mc", "fsl_an") and "servers" in state:
-            out["servers"] = jax.tree_util.tree_map(avg, state["servers"])
-        return out
-    return aggregate
+    return get_method(method).make_aggregate()
 
 
 STEPS = {"fsl_mc": make_fsl_mc_step, "fsl_oc": make_fsl_oc_step,
          "fsl_an": make_fsl_an_step}
+
+__all__ = ["init_state", "make_aggregate", "STEPS", "make_fsl_mc_step",
+           "make_fsl_oc_step", "make_fsl_an_step"]

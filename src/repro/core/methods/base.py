@@ -1,0 +1,186 @@
+"""The `FSLMethod` interface: one API for CSE-FSL and every baseline.
+
+A *method* is a stateless strategy object describing one federated split
+learning algorithm end to end:
+
+  - ``init_state(bundle, fsl, key)``      -> state pytree (stacked clients)
+  - ``make_round_step(bundle, fsl, server_constraint=None)``
+        -> jittable ``round_step(state, batch, lr) -> (state, metrics)``
+  - ``make_aggregate()``                  -> jittable ``aggregate(state)``
+  - ``merged_params(state)``              -> deployable ``{"client", ["aux",]
+                                             "server"}`` params
+  - ``comm_profile(cm, fsl, batch_size)`` -> declarative :class:`CommProfile`
+
+All methods share one batch contract: ``batch = (inputs, labels)`` with
+leading dims ``[n_clients, h, B, ...]``.  CSE-FSL consumes the ``h`` axis
+as its local-update period (paper Alg. 1); the per-batch baselines run the
+``h`` inner batches through a ``lax.scan`` (``h=1`` — one mini-batch per
+round — remains the faithful-to-paper default for them).
+
+Implementations register themselves with :func:`register`; the Trainer and
+the launchers resolve them by name via :func:`get_method`, so adding a
+fifth method is a one-file change (see README "Add your own method").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import FSLConfig
+from repro.core.accounting import CostModel
+from repro.core.bundle import SplitModelBundle
+
+# ---------------------------------------------------------------------------
+# Declarative communication / storage profile (paper Table II per method)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CommProfile:
+    """Bytes moved / held by one method at a given (cost model, fsl, B).
+
+    Per-*round* fields are totals across all ``n`` clients for one global
+    round (= ``h`` mini-batches per client); ``model_sync`` is the total for
+    one aggregation event (up + down for every client).  Storage fields are
+    static byte counts (Table II last column and §VI-E).
+    """
+    uplink_smashed: int         # per round
+    uplink_labels: int          # per round
+    downlink_grads: int         # per round
+    model_sync: int             # per aggregation event
+    server_storage: int         # persistent server-side model bytes
+    total_storage: int          # aggregation-time storage (server + clients)
+
+    @property
+    def per_round_total(self) -> int:
+        return self.uplink_smashed + self.uplink_labels + self.downlink_grads
+
+
+# ---------------------------------------------------------------------------
+# The method interface
+# ---------------------------------------------------------------------------
+
+
+class FSLMethod:
+    """Base class: subclasses set the four declarative traits and implement
+    the state/step/aggregate factories."""
+
+    name: str = ""
+    # Declarative traits — these four booleans fully determine Table II.
+    uploads_every_batch: bool = True    # False: once per h batches (CSE-FSL)
+    downloads_gradients: bool = True    # True: cut-layer grads per batch
+    server_replicated: bool = False     # True: one server copy per client
+    has_aux: bool = False               # True: auxiliary head on clients
+
+    # -- training ----------------------------------------------------------
+    def init_state(self, bundle: SplitModelBundle, fsl: FSLConfig,
+                   key) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def make_round_step(self, bundle: SplitModelBundle, fsl: FSLConfig,
+                        server_constraint: Optional[Callable] = None):
+        """Returns ``round_step(state, batch, lr) -> (state, metrics)`` over
+        the unified ``[n, h, B, ...]`` batch contract."""
+        raise NotImplementedError
+
+    def make_aggregate(self):
+        raise NotImplementedError
+
+    def merged_params(self, state) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    # -- accounting --------------------------------------------------------
+    def comm_profile(self, cm: CostModel, fsl: FSLConfig,
+                     batch_size: int) -> CommProfile:
+        n, q, lb = cm.n, cm.q, cm.label_bytes
+        uploads = fsl.h if self.uploads_every_batch else 1
+        smashed = n * uploads * q * batch_size
+        labels = n * uploads * lb * batch_size
+        grads = smashed if self.downloads_gradients else 0
+        aux = cm.aux if self.has_aux else 0
+        sync = 2 * n * (cm.w_client + aux)
+        server = (n if self.server_replicated else 1) * (cm.w_server + aux)
+        total = n * (cm.w_client + aux) + server
+        return CommProfile(uplink_smashed=smashed, uplink_labels=labels,
+                           downlink_grads=grads, model_sync=sync,
+                           server_storage=server, total_storage=total)
+
+    def __repr__(self):
+        return f"<FSLMethod {self.name}>"
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, FSLMethod] = {}
+
+
+def register(cls):
+    """Class decorator: ``@register`` on an FSLMethod subclass makes it
+    resolvable by ``get_method(cls.name)``."""
+    if not cls.name:
+        raise ValueError(f"{cls.__name__} must set a non-empty .name")
+    _REGISTRY[cls.name] = cls()
+    return cls
+
+
+def get_method(name: str) -> FSLMethod:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown FSL method {name!r}; registered: "
+                       f"{available_methods()}") from None
+
+
+def available_methods() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers for implementations
+# ---------------------------------------------------------------------------
+
+
+def stack_clients(tree, n: int):
+    """Replicate a param/opt pytree onto a leading ``num_clients`` axis."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy()
+        if hasattr(x, "shape") else x, tree)
+
+
+def fedavg(tree):
+    """Mean over the stacked client axis, broadcast back (Eq. 14)."""
+    def avg(x):
+        m = jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True)
+        return jnp.broadcast_to(m, x.shape).astype(x.dtype)
+    return jax.tree_util.tree_map(avg, tree)
+
+
+def client_mean(tree):
+    """Mean over the stacked client axis without re-broadcasting."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.mean(x.astype(jnp.float32), 0).astype(x.dtype), tree)
+
+
+def scan_over_h(batch_step):
+    """Lift a per-mini-batch step to the ``[n, h, B, ...]`` round contract.
+
+    ``batch_step(state, batch_nb, lr)`` consumes one global mini-batch
+    ``[n, B, ...]``; the returned ``round_step`` scans it over the ``h``
+    axis (the baselines' h successive uploads) and means the metrics.
+    """
+    def round_step(state, batch, lr):
+        per_h = jax.tree_util.tree_map(lambda x: jnp.moveaxis(x, 1, 0), batch)
+
+        def one(st, b):
+            return batch_step(st, b, lr)
+
+        state, metrics = lax.scan(one, state, per_h)
+        return state, jax.tree_util.tree_map(jnp.mean, metrics)
+
+    return round_step

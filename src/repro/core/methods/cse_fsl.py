@@ -1,0 +1,194 @@
+"""CSE-FSL: the paper's protocol as jittable JAX step functions.
+
+One *global round* t (paper Fig. 2, Algorithms 1 & 2):
+
+  1. clients run ``h`` local mini-batch steps on (x_c, a_c) via the
+     auxiliary-head local loss (Eq. 8-10) — **no server gradients**;
+  2. each client recomputes and "uploads" the smashed data of its last
+     batch with the *updated* client model g_{x_c^{t,h}} (Alg. 1 line 9);
+  3. the server consumes the smashed batches **sequentially** in arrival
+     order, updating its *single* model per batch (Eq. 11-13) — or, as a
+     beyond-paper optimization, in one fused batched update;
+  4. every C batches, FedAvg aggregation of (x_c, a_c) (Eq. 14), realized
+     as a mean over the stacked client axis.
+
+Clients are *stacked* on a leading ``num_clients`` axis (sharded over the
+("pod","data") mesh axes in the distributed launcher); between aggregations
+the stacked slices genuinely diverge, exactly like real clients.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import FSLConfig
+from repro.core.bundle import SplitModelBundle
+from repro.core.methods.base import (FSLMethod, client_mean, fedavg, register,
+                                     stack_clients)
+from repro.optim import make_optimizer
+
+# ---------------------------------------------------------------------------
+# State
+# ---------------------------------------------------------------------------
+
+
+def init_state(bundle: SplitModelBundle, fsl: FSLConfig, key) -> Dict[str, Any]:
+    """clients: stacked replicas of (x_c, a_c) + opt state; server: single."""
+    params = bundle.init(key)
+    opt_init, _ = make_optimizer(fsl.optimizer)
+    n = fsl.num_clients
+    client = {"params": params["client"], "aux": params["aux"]}
+    return {
+        "clients": {"params": stack_clients(client, n),
+                    "opt": stack_clients(opt_init(client), n)},
+        "server": {"params": params["server"], "opt": opt_init(params["server"])},
+        "round": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Smashed-data quantization (beyond-paper uplink compression)
+# ---------------------------------------------------------------------------
+
+
+def quantize_smashed(smashed, dtype: str):
+    if dtype != "int8":
+        return smashed
+    flat = smashed.reshape(smashed.shape[0], -1)
+    scale = jnp.max(jnp.abs(flat), axis=-1, keepdims=True) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    deq = (q.astype(jnp.float32) * scale).reshape(smashed.shape)
+    return deq.astype(smashed.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Round step
+# ---------------------------------------------------------------------------
+
+
+def make_round_step(bundle: SplitModelBundle, fsl: FSLConfig,
+                    server_constraint=None):
+    """Returns ``round_step(state, batch, lr) -> (state, metrics)``.
+
+    batch: (inputs, labels) pytrees with leading dims [n_clients, h, B, ...].
+    ``server_constraint``: optional fn(tree) -> tree applying a sharding
+    constraint to each per-client (smashed, labels) the sequential server
+    scan consumes — the §Perf fix for the data-axis sitting idle during
+    the faithful event-triggered update (see EXPERIMENTS.md §Perf).
+    """
+    _, opt_update = make_optimizer(fsl.optimizer)
+
+    def client_round(cstate, cbatch, lr):
+        """One client: h local steps, then recompute smashed of last batch."""
+        inputs, labels = cbatch
+
+        def one_step(carry, b):
+            params, opt = carry
+            binputs, blabels = b
+            (loss, _), grads = jax.value_and_grad(
+                lambda pr: bundle.client_loss(pr["params"], pr["aux"],
+                                              binputs, blabels),
+                has_aux=True)(params)
+            new_params, new_opt = opt_update(grads, opt, params, lr)
+            return (new_params, new_opt), loss
+
+        (params, opt), losses = lax.scan(
+            one_step, (cstate["params"], cstate["opt"]), (inputs, labels),
+            unroll=fsl.unroll or 1)
+        # Alg.1 line 9: smashed data of the last batch with *updated* weights
+        last_inputs = jax.tree_util.tree_map(lambda x: x[-1], inputs)
+        last_labels = labels[-1]
+        smashed = bundle.client_smashed(params["params"], last_inputs)
+        smashed = quantize_smashed(smashed, fsl.smashed_dtype)
+        return ({"params": params, "opt": opt}, smashed, last_labels,
+                jnp.mean(losses))
+
+    def server_update(sstate, smashed, labels, lr):
+        """smashed: [n, B, ...]; labels: [n, B, ...]."""
+        smashed = lax.stop_gradient(smashed)
+        if fsl.server_update == "sequential":
+            # Faithful Eq. (11): one update per arriving client batch.
+            def one(carry, xs):
+                params, opt = carry
+                sm, lb = xs
+                if server_constraint is not None:
+                    sm = server_constraint(sm)
+                    lb = server_constraint(lb)
+                loss, grads = jax.value_and_grad(bundle.server_loss)(
+                    params, sm, lb)
+                params, opt = opt_update(grads, opt, params, lr)
+                return (params, opt), loss
+
+            (params, opt), losses = lax.scan(
+                one, (sstate["params"], sstate["opt"]), (smashed, labels),
+                unroll=fsl.unroll or 1)
+            return {"params": params, "opt": opt}, jnp.mean(losses)
+        # Beyond-paper: single fused update over the concatenated batch.
+        # Gradient = mean over clients; lr scaled by n so the total step
+        # magnitude matches n sequential steps to first order.
+        n = smashed.shape[0]
+        merged_sm = smashed.reshape((-1,) + smashed.shape[2:])
+        merged_lb = labels.reshape((-1,) + labels.shape[2:])
+        loss, grads = jax.value_and_grad(bundle.server_loss)(
+            sstate["params"], merged_sm, merged_lb)
+        params, opt = opt_update(grads, sstate["opt"], sstate["params"],
+                                 lr * n)
+        return {"params": params, "opt": opt}, loss
+
+    def round_step(state, batch, lr):
+        inputs, labels = batch
+        cstates, smashed, slabels, closs = jax.vmap(
+            client_round, in_axes=(0, 0, None))(state["clients"],
+                                                (inputs, labels), lr)
+        sstate, sloss = server_update(state["server"], smashed, slabels, lr)
+        new_state = {"clients": cstates, "server": sstate,
+                     "round": state["round"] + 1}
+        metrics = {"client_loss": jnp.mean(closs), "server_loss": sloss}
+        return new_state, metrics
+
+    return round_step
+
+
+def make_aggregate():
+    """FedAvg over the stacked client axis (Eq. 14), opt state included."""
+    def aggregate(state):
+        return {**state, "clients": fedavg(state["clients"])}
+    return aggregate
+
+
+def merged_params(state) -> Dict[str, Any]:
+    """Final model = aggregated client stage + server stage (paper Step 4)."""
+    cp = client_mean(state["clients"]["params"])
+    return {"client": cp["params"], "aux": cp["aux"],
+            "server": state["server"]["params"]}
+
+
+# ---------------------------------------------------------------------------
+# Registered method
+# ---------------------------------------------------------------------------
+
+
+@register
+class CSEFSL(FSLMethod):
+    """The paper's method: h-periodic upload, aux head, single server."""
+    name = "cse_fsl"
+    uploads_every_batch = False
+    downloads_gradients = False
+    server_replicated = False
+    has_aux = True
+
+    def init_state(self, bundle, fsl, key):
+        return init_state(bundle, fsl, key)
+
+    def make_round_step(self, bundle, fsl, server_constraint=None):
+        return make_round_step(bundle, fsl,
+                               server_constraint=server_constraint)
+
+    def make_aggregate(self):
+        return make_aggregate()
+
+    def merged_params(self, state):
+        return merged_params(state)

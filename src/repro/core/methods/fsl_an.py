@@ -1,0 +1,82 @@
+"""FSL_AN [Han et al.]: auxiliary network (local client update, no gradient
+download) but per-client server replicas and per-batch smashed upload.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import FSLConfig
+from repro.core.bundle import SplitModelBundle
+from repro.core.methods.base import (FSLMethod, client_mean, fedavg, register,
+                                     scan_over_h, stack_clients)
+from repro.optim import make_optimizer
+
+
+def init_state(bundle: SplitModelBundle, fsl: FSLConfig, key) -> Dict[str, Any]:
+    params = bundle.init(key)
+    opt_init, _ = make_optimizer(fsl.optimizer)
+    n = fsl.num_clients
+    client = {"params": params["client"], "aux": params["aux"]}
+    return {"clients": {"params": stack_clients(client, n),
+                        "opt": stack_clients(opt_init(client), n)},
+            "servers": {"params": stack_clients(params["server"], n),
+                        "opt": stack_clients(opt_init(params["server"]), n)},
+            "round": jnp.zeros((), jnp.int32)}
+
+
+def make_batch_step(bundle: SplitModelBundle, fsl: FSLConfig):
+    """One mini-batch [n, B, ...]: aux local update + per-batch upload."""
+    _, opt_update = make_optimizer(fsl.optimizer)
+
+    def per_client(cstate, sstate, inputs, labels, lr):
+        # local (aux) update — no gradient wait
+        (closs, _), gc = jax.value_and_grad(
+            lambda pr: bundle.client_loss(pr["params"], pr["aux"],
+                                          inputs, labels),
+            has_aux=True)(cstate["params"])
+        cp, copt = opt_update(gc, cstate["opt"], cstate["params"], lr)
+        # per-batch smashed upload with the updated client model
+        smashed = lax.stop_gradient(bundle.client_smashed(cp["params"], inputs))
+        sloss, gs = jax.value_and_grad(bundle.server_loss)(
+            sstate["params"], smashed, labels)
+        sp, sopt = opt_update(gs, sstate["opt"], sstate["params"], lr)
+        return ({"params": cp, "opt": copt}, {"params": sp, "opt": sopt},
+                closs, sloss)
+
+    def step(state, batch, lr):
+        inputs, labels = batch
+        cs, ss, closs, sloss = jax.vmap(per_client, in_axes=(0, 0, 0, 0, None))(
+            state["clients"], state["servers"], inputs, labels, lr)
+        return ({"clients": cs, "servers": ss, "round": state["round"] + 1},
+                {"client_loss": jnp.mean(closs), "server_loss": jnp.mean(sloss)})
+    return step
+
+
+@register
+class FSLAN(FSLMethod):
+    name = "fsl_an"
+    uploads_every_batch = True
+    downloads_gradients = False
+    server_replicated = True
+    has_aux = True
+
+    def init_state(self, bundle, fsl, key):
+        return init_state(bundle, fsl, key)
+
+    def make_round_step(self, bundle, fsl, server_constraint=None):
+        return scan_over_h(make_batch_step(bundle, fsl))
+
+    def make_aggregate(self):
+        def aggregate(state):
+            return {**state, "clients": fedavg(state["clients"]),
+                    "servers": fedavg(state["servers"])}
+        return aggregate
+
+    def merged_params(self, state):
+        cp = client_mean(state["clients"]["params"])
+        return {"client": cp["params"], "aux": cp["aux"],
+                "server": client_mean(state["servers"]["params"])}

@@ -1,0 +1,76 @@
+"""FSL_MC [SplitFed]: per-client server replicas; per-batch smashed upload
+*and* per-batch gradient download (end-to-end backprop through the cut).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FSLConfig
+from repro.core.bundle import SplitModelBundle
+from repro.core.methods.base import (FSLMethod, client_mean, fedavg, register,
+                                     scan_over_h, stack_clients)
+from repro.optim import make_optimizer
+
+
+def init_state(bundle: SplitModelBundle, fsl: FSLConfig, key) -> Dict[str, Any]:
+    params = bundle.init(key)
+    opt_init, _ = make_optimizer(fsl.optimizer)
+    n = fsl.num_clients
+    client = params["client"]
+    return {"clients": {"params": stack_clients(client, n),
+                        "opt": stack_clients(opt_init(client), n)},
+            "servers": {"params": stack_clients(params["server"], n),
+                        "opt": stack_clients(opt_init(params["server"]), n)},
+            "round": jnp.zeros((), jnp.int32)}
+
+
+def make_batch_step(bundle: SplitModelBundle, fsl: FSLConfig):
+    """One mini-batch [n, B, ...]: end-to-end split backprop per client."""
+    _, opt_update = make_optimizer(fsl.optimizer)
+
+    def per_client(cstate, sstate, inputs, labels, lr):
+        def loss_fn(cp, sp):
+            return bundle.e2e_loss(cp, sp, inputs, labels)
+        loss, (gc, gs) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+            cstate["params"], sstate["params"])
+        cp, copt = opt_update(gc, cstate["opt"], cstate["params"], lr)
+        sp, sopt = opt_update(gs, sstate["opt"], sstate["params"], lr)
+        return ({"params": cp, "opt": copt}, {"params": sp, "opt": sopt}, loss)
+
+    def step(state, batch, lr):
+        inputs, labels = batch
+        cs, ss, loss = jax.vmap(per_client, in_axes=(0, 0, 0, 0, None))(
+            state["clients"], state["servers"], inputs, labels, lr)
+        return ({"clients": cs, "servers": ss, "round": state["round"] + 1},
+                {"loss": jnp.mean(loss)})
+    return step
+
+
+@register
+class FSLMC(FSLMethod):
+    name = "fsl_mc"
+    uploads_every_batch = True
+    downloads_gradients = True
+    server_replicated = True
+    has_aux = False
+
+    def init_state(self, bundle, fsl, key):
+        return init_state(bundle, fsl, key)
+
+    def make_round_step(self, bundle, fsl, server_constraint=None):
+        # per-client replicas run fully in parallel; no sequential server
+        # consumption exists for a constraint to rebalance.
+        return scan_over_h(make_batch_step(bundle, fsl))
+
+    def make_aggregate(self):
+        def aggregate(state):
+            return {**state, "clients": fedavg(state["clients"]),
+                    "servers": fedavg(state["servers"])}
+        return aggregate
+
+    def merged_params(self, state):
+        return {"client": client_mean(state["clients"]["params"]),
+                "server": client_mean(state["servers"]["params"])}

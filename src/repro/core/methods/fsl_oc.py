@@ -1,0 +1,102 @@
+"""FSL_OC [SplitFed]: one shared server model updated sequentially; clients
+still wait for cut-layer gradients; gradient clipping for stability.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import FSLConfig
+from repro.core.bundle import SplitModelBundle
+from repro.core.methods.base import (FSLMethod, client_mean, fedavg, register,
+                                     scan_over_h, stack_clients)
+from repro.optim import clip_by_global_norm, make_optimizer
+
+
+def init_state(bundle: SplitModelBundle, fsl: FSLConfig, key) -> Dict[str, Any]:
+    params = bundle.init(key)
+    opt_init, _ = make_optimizer(fsl.optimizer)
+    n = fsl.num_clients
+    client = params["client"]
+    return {"clients": {"params": stack_clients(client, n),
+                        "opt": stack_clients(opt_init(client), n)},
+            "server": {"params": params["server"],
+                       "opt": opt_init(params["server"])},
+            "round": jnp.zeros((), jnp.int32)}
+
+
+def make_batch_step(bundle: SplitModelBundle, fsl: FSLConfig,
+                    server_constraint=None):
+    """One mini-batch [n, B, ...]: forward / sequential server / backward."""
+    _, opt_update = make_optimizer(fsl.optimizer)
+    clip = fsl.grad_clip or 1.0
+
+    def step(state, batch, lr):
+        inputs, labels = batch
+
+        # 1) client forwards (parallel)
+        def fwd(cp, x):
+            return bundle.client_smashed(cp, x)
+        smashed = jax.vmap(fwd)(state["clients"]["params"], inputs)
+
+        # 2) server: sequential scan over client arrivals; also emit the
+        #    cut-layer gradient for each client's backprop (the downlink).
+        def one(carry, xs):
+            params, opt = carry
+            sm, lb = xs
+            if server_constraint is not None:
+                sm = server_constraint(sm)
+                lb = server_constraint(lb)
+            loss, (gs, gsm) = jax.value_and_grad(
+                bundle.server_loss, argnums=(0, 1))(params, sm, lb)
+            gs, _ = clip_by_global_norm(gs, clip)
+            params, opt = opt_update(gs, opt, params, lr)
+            return (params, opt), (gsm, loss)
+
+        (sp, sopt), (gsm, losses) = lax.scan(
+            one, (state["server"]["params"], state["server"]["opt"]),
+            (smashed, labels))
+
+        # 3) client backward with the downloaded cut gradients (parallel)
+        def bwd(cstate, x, g):
+            def smash_fn(p):
+                return bundle.client_smashed(p, x)
+            _, vjp = jax.vjp(smash_fn, cstate["params"])
+            (gc,) = vjp(g)
+            gc, _ = clip_by_global_norm(gc, clip)
+            cp, copt = opt_update(gc, cstate["opt"], cstate["params"], lr)
+            return {"params": cp, "opt": copt}
+        cs = jax.vmap(bwd, in_axes=(0, 0, 0))(state["clients"], inputs, gsm)
+
+        return ({"clients": cs, "server": {"params": sp, "opt": sopt},
+                 "round": state["round"] + 1},
+                {"loss": jnp.mean(losses)})
+    return step
+
+
+@register
+class FSLOC(FSLMethod):
+    name = "fsl_oc"
+    uploads_every_batch = True
+    downloads_gradients = True
+    server_replicated = False
+    has_aux = False
+
+    def init_state(self, bundle, fsl, key):
+        return init_state(bundle, fsl, key)
+
+    def make_round_step(self, bundle, fsl, server_constraint=None):
+        return scan_over_h(make_batch_step(
+            bundle, fsl, server_constraint=server_constraint))
+
+    def make_aggregate(self):
+        def aggregate(state):
+            return {**state, "clients": fedavg(state["clients"])}
+        return aggregate
+
+    def merged_params(self, state):
+        return {"client": client_mean(state["clients"]["params"]),
+                "server": state["server"]["params"]}

@@ -1,0 +1,120 @@
+"""Method-agnostic host-level trainer.
+
+One training loop for every registered :class:`FSLMethod`: the Trainer owns
+jit + donation, the lr schedule, the aggregation cadence (C), callbacks /
+history, and — when given a :class:`CostModel` — integrated communication
+metering driven by the method's declarative :class:`CommProfile` (no
+per-method branching in the drivers).
+
+  trainer = Trainer(bundle, fsl)            # method resolved from fsl.method
+  state = trainer.init(seed=0)
+  state, history = trainer.run(state, batcher, num_rounds=50,
+                               log_every=10, meter=CommMeter(), cost_model=cm)
+
+``batcher.next_round()`` must yield ``(inputs, labels)`` pytrees with
+leading dims ``[n_clients, h, B, ...]`` — the unified batch contract all
+methods consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Union
+
+import jax
+
+from repro.configs.base import FSLConfig
+from repro.core.accounting import CommMeter, CostModel
+from repro.core.bundle import SplitModelBundle
+from repro.core.methods import CommProfile, FSLMethod, get_method
+
+
+@dataclasses.dataclass
+class Trainer:
+    bundle: SplitModelBundle
+    fsl: FSLConfig
+    donate: bool = True
+    method: Optional[Union[str, FSLMethod]] = None  # default: fsl.method
+    server_constraint: Optional[Callable] = None
+
+    def __post_init__(self):
+        m = self.method if self.method is not None else self.fsl.method
+        if isinstance(m, str):
+            m = get_method(m)
+        self.method = m
+        donate = (0,) if self.donate else ()
+        self.step_fn = jax.jit(
+            m.make_round_step(self.bundle, self.fsl,
+                              server_constraint=self.server_constraint),
+            donate_argnums=donate)
+        self.agg_fn = jax.jit(m.make_aggregate(), donate_argnums=donate)
+
+    # -- public per-round API (custom loops, e.g. arrival-order studies) ----
+    def init(self, seed: int = 0):
+        return self.method.init_state(self.bundle, self.fsl,
+                                      jax.random.PRNGKey(seed))
+
+    def lr_at(self, rnd: int) -> float:
+        steps = rnd // self.fsl.lr_decay_every
+        return self.fsl.lr * self.fsl.lr_decay ** steps
+
+    def step(self, state, batch, lr: Optional[float] = None, *,
+             rnd: Optional[int] = None):
+        """One global round.  Pass ``lr`` explicitly or ``rnd`` to use the
+        schedule (``rnd=None`` and ``lr=None`` means lr_at(0))."""
+        if lr is None:
+            lr = self.lr_at(rnd or 0)
+        return self.step_fn(state, batch, lr)
+
+    def aggregate(self, state):
+        return self.agg_fn(state)
+
+    def merged_params(self, state):
+        """Deployable {"client", ["aux",] "server"} params for evaluation."""
+        return self.method.merged_params(state)
+
+    def comm_profile(self, cost_model: CostModel,
+                     batch_size: int) -> CommProfile:
+        return self.method.comm_profile(cost_model, self.fsl, batch_size)
+
+    # -- the loop -----------------------------------------------------------
+    def run(self, state, batcher, num_rounds: int, log_every: int = 0,
+            callback=None, meter: Optional[CommMeter] = None,
+            cost_model: Optional[CostModel] = None):
+        """Run ``num_rounds`` global rounds.
+
+        - aggregation fires every C batches (``fsl.resolved_agg_every``),
+          counted from the start of this call;
+        - ``callback(rnd, metrics, state)`` fires on the ``log_every``
+          cadence, after aggregation, with float-cast metrics;
+        - with ``meter`` + ``cost_model``, per-round and per-aggregation
+          bytes from the method's CommProfile are logged and a
+          ``comm_bytes`` running total is added to the history rows.
+        """
+        batches_done = 0
+        agg_every = self.fsl.resolved_agg_every
+        history = []
+        profile = None
+        for rnd in range(num_rounds):
+            batch = batcher.next_round()
+            if meter is not None and cost_model is not None and profile is None:
+                batch_size = jax.tree_util.tree_leaves(batch[1])[0].shape[2]
+                profile = self.comm_profile(cost_model, batch_size)
+            state, metrics = self.step_fn(state, batch, self.lr_at(rnd))
+            if profile is not None:
+                meter.log("uplink_smashed", profile.uplink_smashed)
+                meter.log("uplink_labels", profile.uplink_labels)
+                meter.log("downlink_grads", profile.downlink_grads)
+            batches_done += self.fsl.h
+            if batches_done % agg_every == 0:
+                state = self.agg_fn(state)
+                if profile is not None:
+                    meter.log("model_sync", profile.model_sync)
+            if log_every and (rnd + 1) % log_every == 0:
+                m = {k: float(v) for k, v in metrics.items()}
+                row: dict = {"round": rnd + 1, **m}
+                if meter is not None:
+                    row["comm_bytes"] = meter.total
+                history.append(row)
+                if callback:
+                    callback(rnd + 1, m, state)
+        return state, history

@@ -187,10 +187,19 @@ class Roofline:
         }
 
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` returns a dict on recent jax and a
+    one-element list of dicts on older versions — normalize to a dict."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def analyze(compiled, *, arch: str, shape: str, mesh_name: str, chips: int,
             model_flops_global: float, compile_seconds: float = 0.0,
             hlo_text: Optional[str] = None) -> Roofline:
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     flops = float(ca.get("flops", 0.0))
     byts = float(ca.get("bytes accessed", 0.0))
     text = hlo_text if hlo_text is not None else compiled.as_text()
@@ -223,7 +232,6 @@ def analyze(compiled, *, arch: str, shape: str, mesh_name: str, chips: int,
 _DEF_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^()]*\))|(?:[a-z0-9]+\["
     r"[0-9,]*\](?:\{[^}]*\})?))\s+([a-z0-9\-]+)")
-_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 _CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
 _BRANCHES_RE = re.compile(
@@ -252,16 +260,44 @@ def _parse_ops(lines):
     return out
 
 
+def _split_top_level(s: str):
+    """Split on commas outside any (), [], {} nesting — shapes like
+    ``f32[64,64]{1,0}`` and tuple-typed operands stay intact."""
+    parts, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return parts
+
+
 def _operand_names(rest):
-    # first (...) group past the type holds the operands
-    m = _OPERANDS_RE.search(rest)
-    if not m:
+    # first balanced (...) group past the type holds the operands
+    i = rest.find("(")
+    if i < 0:
+        return []
+    depth = 0
+    for j in range(i, len(rest)):
+        if rest[j] == "(":
+            depth += 1
+        elif rest[j] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    else:
         return []
     names = []
-    for tok in m.group(1).split(","):
-        tok = tok.strip().lstrip("%")
+    for tok in _split_top_level(rest[i + 1:j]):
         # strip inline types like "f32[8,16] %foo"
-        tok = tok.split(" ")[-1].lstrip("%")
+        tok = tok.strip().split(" ")[-1].lstrip("%")
         if tok and not tok[0].isdigit():
             names.append(tok)
     return names

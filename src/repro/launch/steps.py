@@ -23,8 +23,8 @@ import numpy as np
 from repro import sharding as shd
 from repro.common import dtype_of
 from repro.configs.base import FSLConfig, ModelConfig, ShapeConfig
-from repro.core import protocol
 from repro.core.bundle import transformer_bundle
+from repro.core.methods import get_method
 from repro.launch import specs as specs_mod
 from repro.models import model as tf_mod
 from repro.models.blocks import Ctx
@@ -113,12 +113,13 @@ def build_train(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
             return jax.lax.with_sharding_constraint(
                 x, jax.sharding.NamedSharding(mesh, spec))
 
-    step = protocol.make_round_step(bundle, fsl, server_constraint=constraint)
+    method = get_method(fsl.method)
+    step = method.make_round_step(bundle, fsl, server_constraint=constraint)
     if fsdp_server is None:
         fsdp_server = wants_fsdp(cfg)
 
     state_abs = jax.eval_shape(
-        lambda k: protocol.init_state(bundle, fsl, k),
+        lambda k: method.init_state(bundle, fsl, k),
         jax.ShapeDtypeStruct((2,), jnp.uint32))
     sspec = shd.state_specs(state_abs, mesh=mesh, fsdp_server=fsdp_server)
     state_in = shd.with_shardings(state_abs, sspec, mesh)

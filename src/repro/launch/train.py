@@ -15,7 +15,6 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import time
 
@@ -26,10 +25,10 @@ import numpy as np
 from repro import sharding as shd
 from repro.configs.base import FSLConfig, SHAPES, ShapeConfig
 from repro.configs.registry import get_config
-from repro.core import baselines, protocol
-from repro.core.accounting import CommMeter, CostModel, meter_aggregation, \
-    meter_round
+from repro.core.accounting import CommMeter, CostModel
 from repro.core.bundle import transformer_bundle
+from repro.core.methods import available_methods
+from repro.core.trainer import Trainer
 from repro.common import bytes_of, count_params
 from repro.data import FederatedBatcher, partition_dirichlet, partition_iid, \
     synthetic_lm
@@ -82,7 +81,7 @@ def main():
     ap.add_argument("--samples", type=int, default=512)
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--method", default="cse_fsl",
-                    choices=["cse_fsl", "fsl_mc", "fsl_oc", "fsl_an"])
+                    choices=list(available_methods()))
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--non-iid", action="store_true")
@@ -110,47 +109,19 @@ def main():
         aux=bytes_of(params_abs["aux"]))
     meter = CommMeter()
 
-    history = []
+    # One Trainer drives every registered method: the CommProfile of the
+    # selected method replaces the old per-method metering branches.
+    trainer = Trainer(bundle, fsl)
+    state = trainer.init()
     t0 = time.time()
-    if args.method == "cse_fsl":
-        trainer = protocol.Trainer(bundle, fsl)
-        state = trainer.init()
 
-        def cb(rnd, metrics, state):
-            print(f"round {rnd:4d} lr={trainer.lr_at(rnd):.4f} "
-                  + " ".join(f"{k}={v:.4f}" for k, v in metrics.items()))
+    def cb(rnd, metrics, _state):
+        print(f"round {rnd:4d} lr={trainer.lr_at(rnd):.4f} "
+              + " ".join(f"{k}={v:.4f}" for k, v in metrics.items()))
 
-        for rnd in range(args.rounds):
-            batch = batcher.next_round()
-            state, metrics = trainer._round(state, batch, trainer.lr_at(rnd))
-            meter_round(meter, cm, "cse_fsl", args.h, args.batch * args.h)
-            state = trainer._agg(state)
-            meter_aggregation(meter, cm, "cse_fsl")
-            if (rnd + 1) % args.log_every == 0:
-                m = {k: float(v) for k, v in metrics.items()}
-                history.append({"round": rnd + 1, **m,
-                                "comm_bytes": meter.total})
-                cb(rnd + 1, m, state)
-    else:
-        state = baselines.init_state(bundle, fsl, jax.random.PRNGKey(0),
-                                     args.method)
-        step = jax.jit(baselines.STEPS[args.method](bundle, fsl))
-        agg = jax.jit(baselines.make_aggregate(args.method))
-        for rnd in range(args.rounds):
-            inputs, labels = batcher.next_round()
-            inputs = jax.tree_util.tree_map(lambda a: a[:, 0], inputs)
-            labels = labels[:, 0]
-            state, metrics = step(state, (inputs, labels), args.lr)
-            meter_round(meter, cm, args.method, 1, args.batch)
-            state = agg(state)
-            meter_aggregation(meter, cm, args.method)
-            if (rnd + 1) % args.log_every == 0:
-                m = {k: float(v) for k, v in metrics.items()}
-                history.append({"round": rnd + 1, **m,
-                                "comm_bytes": meter.total})
-                print(f"round {rnd+1:4d} "
-                      + " ".join(f"{k}={v:.4f}" for k, v in m.items()))
-
+    state, history = trainer.run(state, batcher, args.rounds,
+                                 log_every=args.log_every, callback=cb,
+                                 meter=meter, cost_model=cm)
     dt = time.time() - t0
     print(f"\n{args.rounds} rounds in {dt:.1f}s; "
           f"total comm = {meter.total/2**20:.1f} MiB "

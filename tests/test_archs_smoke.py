@@ -11,7 +11,7 @@ import pytest
 from repro.configs.base import FSLConfig, SHAPES
 from repro.configs.registry import arch_names, get_config
 from repro.core.bundle import transformer_bundle
-from repro.core.protocol import init_state, make_round_step
+from repro.core.methods.cse_fsl import init_state, make_round_step
 from repro.launch.specs import prefill_specs, train_batch_specs
 from repro.models.model import decode_step, init_params, prefill
 

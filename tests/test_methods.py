@@ -1,0 +1,131 @@
+"""The unified `FSLMethod` API: all four methods through one Trainer loop,
+registry behavior, CommProfile consistency with the analytic Table II, and
+bitwise equivalence of the method-agnostic Trainer with the pre-refactor
+CSE-FSL loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FSLConfig
+from repro.core.accounting import (CommMeter, CostModel, meter_aggregation,
+                                   meter_round, server_storage, total_storage)
+from repro.core.bundle import cnn_bundle
+from repro.core.methods import available_methods, get_method
+from repro.core.methods.cse_fsl import make_aggregate, make_round_step
+from repro.core.trainer import Trainer
+from repro.data import FederatedBatcher, partition_iid, \
+    synthetic_classification
+from repro.models.cnn import CIFAR10
+
+ALL_METHODS = ("cse_fsl", "fsl_mc", "fsl_oc", "fsl_an")
+
+
+def _setup(n=2, samples=240, seed=0):
+    bundle = cnn_bundle(CIFAR10)
+    x, y = synthetic_classification(samples, CIFAR10.in_shape, 10, seed=seed,
+                                    signal=12.0)
+    return bundle, partition_iid(x, y, n, seed=seed)
+
+
+def test_registry_contains_all_paper_methods():
+    assert set(ALL_METHODS) <= set(available_methods())
+    with pytest.raises(KeyError, match="unknown FSL method"):
+        get_method("fsl_sage")
+
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_all_methods_share_one_trainer_loop(method):
+    """2 rounds + aggregation through the *same* Trainer.run code path:
+    losses finite, clients synced after the final aggregation, merged
+    params expose the deployable model."""
+    n, h = 2, 2
+    bundle, fed = _setup(n=n)
+    fsl = FSLConfig(num_clients=n, h=h, lr=0.05, method=method,
+                    grad_clip=1.0 if method == "fsl_oc" else 0.0)
+    trainer = Trainer(bundle, fsl, donate=False)
+    state = trainer.init(0)
+    batcher = FederatedBatcher(fed, 8, h, seed=0)
+    state, history = trainer.run(state, batcher, 2, log_every=1)
+    assert len(history) == 2
+    for row in history:
+        for k, v in row.items():
+            if k != "round":
+                assert np.isfinite(v), (method, row)
+    # default agg cadence C=h: clients FedAvg-synced after each round
+    for leaf in jax.tree_util.tree_leaves(state["clients"]["params"]):
+        arr = np.asarray(leaf, np.float32)
+        np.testing.assert_allclose(arr[0], arr[1], rtol=1e-6, atol=1e-6)
+    merged = trainer.merged_params(state)
+    assert {"client", "server"} <= set(merged)
+    if get_method(method).has_aux:
+        assert "aux" in merged
+
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_comm_profile_matches_analytic_accounting(method):
+    """The declarative CommProfile reproduces the stringly-typed Table II
+    helpers it replaces, for both h=1 and h>1."""
+    cm = CostModel(n=3, q=128, d_local=96, w_client=10_000, w_server=50_000,
+                   aux=700)
+    for h, bs in ((1, 16), (4, 8)):
+        fsl = FSLConfig(num_clients=cm.n, h=h, method=method)
+        profile = get_method(method).comm_profile(cm, fsl, bs)
+        meter = CommMeter()
+        for _ in range(cm.n):           # old drivers metered per client
+            meter_round(meter, cm, method, h, bs)
+        meter_aggregation(meter, cm, method)
+        assert profile.uplink_smashed == meter.counts["uplink_smashed"]
+        assert profile.uplink_labels == meter.counts["uplink_labels"]
+        assert profile.downlink_grads == meter.counts["downlink_grads"]
+        assert profile.model_sync == meter.counts["model_sync"]
+        assert profile.server_storage == server_storage(cm, method)
+        assert profile.total_storage == total_storage(cm, method)
+
+
+def test_unified_trainer_bitwise_matches_legacy_cse_loop():
+    """The method-agnostic Trainer.run must retrace the pre-refactor
+    protocol.Trainer exactly: jitted round step + per-round FedAvg on a
+    fixed seed, compared bitwise."""
+    n, h, rounds = 2, 2, 3
+    bundle, fed = _setup(n=n)
+    fsl = FSLConfig(num_clients=n, h=h, lr=0.1)
+
+    # --- legacy loop: exactly what protocol.Trainer.run did pre-refactor
+    step = jax.jit(make_round_step(bundle, fsl))
+    agg = jax.jit(make_aggregate())
+    legacy_tr = Trainer(bundle, fsl, donate=False)   # only for lr_at/init
+    legacy = legacy_tr.init(0)
+    batcher = FederatedBatcher(fed, 8, h, seed=0)
+    legacy_metrics = []
+    for rnd in range(rounds):
+        b = batcher.next_round()
+        legacy, m = step(legacy, (jnp.asarray(b[0]), jnp.asarray(b[1])),
+                         legacy_tr.lr_at(rnd))
+        legacy = agg(legacy)
+        legacy_metrics.append({k: float(v) for k, v in m.items()})
+
+    # --- unified loop, same seed and batch stream
+    trainer = Trainer(bundle, fsl, donate=False)
+    state = trainer.init(0)
+    state, history = trainer.run(state, FederatedBatcher(fed, 8, h, seed=0),
+                                 rounds, log_every=1)
+
+    for a, b in zip(jax.tree_util.tree_leaves(legacy),
+                    jax.tree_util.tree_leaves(state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for lm, row in zip(legacy_metrics, history):
+        for k, v in lm.items():
+            assert row[k] == v, (k, row, lm)
+
+
+def test_baseline_h_scan_runs_h_batches():
+    """With the unified [n, h, B] contract a baseline round at h=3 makes 3
+    optimizer steps — its round counter (incremented per inner batch)
+    advances by h."""
+    bundle, fed = _setup(n=2)
+    fsl = FSLConfig(num_clients=2, h=3, lr=0.05, method="fsl_an")
+    trainer = Trainer(bundle, fsl, donate=False)
+    state = trainer.init(0)
+    state, _ = trainer.run(state, FederatedBatcher(fed, 8, 3, seed=0), 1)
+    assert int(state["round"]) == 3

@@ -8,11 +8,12 @@ import pytest
 
 from repro.configs.base import FSLConfig, SHAPES
 from repro.configs.registry import get_config
-from repro.core import baselines
 from repro.core.bundle import cnn_bundle, transformer_bundle
-from repro.core.protocol import (Trainer, init_state, make_aggregate,
-                                 make_round_step, merged_params,
-                                 quantize_smashed)
+from repro.core.methods import get_method
+from repro.core.methods.cse_fsl import (init_state, make_aggregate,
+                                        make_round_step, merged_params,
+                                        quantize_smashed)
+from repro.core.trainer import Trainer
 from repro.launch.specs import train_batch_specs
 from repro.models.cnn import CIFAR10
 
@@ -168,33 +169,27 @@ def test_trainer_loop_converges_cnn():
     x, y = synthetic_classification(600, CIFAR10.in_shape, 10, signal=12.0)
     batcher = FederatedBatcher(partition_iid(x, y, 3), 20, 2)
 
-    first, last = None, None
-    for rnd in range(15):
-        batch = batcher.next_round()
-        state, m = trainer._round(state, (jnp.asarray(batch[0]),
-                                          jnp.asarray(batch[1])),
-                                  trainer.lr_at(rnd))
-        if rnd == 0:
-            first = float(m["client_loss"])
-        last = float(m["client_loss"])
-        state = trainer._agg(state)
+    state, history = trainer.run(state, batcher, 15, log_every=1)
+    first = history[0]["client_loss"]
+    last = history[-1]["client_loss"]
     assert last < first - 0.2, (first, last)
 
 
 @pytest.mark.parametrize("method", ["fsl_mc", "fsl_oc", "fsl_an"])
 def test_baselines_one_round(method):
+    """Baselines consume the same [n, h, B, ...] batch contract as CSE."""
     cfg = get_config("qwen3-0.6b").reduced()
-    fsl = FSLConfig(num_clients=2, h=1)
+    fsl = FSLConfig(num_clients=2, h=1, method=method)
     bundle = transformer_bundle(cfg)
-    state = baselines.init_state(bundle, fsl, jax.random.PRNGKey(0), method)
-    step = jax.jit(baselines.STEPS[method](bundle, fsl))
+    m_impl = get_method(method)
+    state = m_impl.init_state(bundle, fsl, jax.random.PRNGKey(0))
+    step = jax.jit(m_impl.make_round_step(bundle, fsl))
     shape = dataclasses.replace(SHAPES["train_4k"], seq_len=32,
                                 global_batch=4)
-    inputs, labels = train_batch_specs(cfg, shape, fsl, as_spec=False)
-    inputs = jax.tree_util.tree_map(lambda x: x[:, 0], inputs)
-    state, m = step(state, (inputs, labels[:, 0]), 0.05)
+    batch = train_batch_specs(cfg, shape, fsl, as_spec=False)
+    state, m = step(state, batch, 0.05)
     assert all(np.isfinite(float(v)) for v in m.values())
-    state = jax.jit(baselines.make_aggregate(method))(state)
+    state = jax.jit(m_impl.make_aggregate())(state)
 
 
 def test_fsl_mc_server_storage_scales_with_n():
@@ -202,8 +197,9 @@ def test_fsl_mc_server_storage_scales_with_n():
     from repro.common import bytes_of
     cfg = get_config("qwen3-0.6b").reduced()
     bundle = transformer_bundle(cfg)
-    s2 = baselines.init_state(bundle, FSLConfig(num_clients=2),
-                              jax.random.PRNGKey(0), "fsl_mc")
-    s4 = baselines.init_state(bundle, FSLConfig(num_clients=4),
-                              jax.random.PRNGKey(0), "fsl_mc")
+    mc = get_method("fsl_mc")
+    s2 = mc.init_state(bundle, FSLConfig(num_clients=2),
+                       jax.random.PRNGKey(0))
+    s4 = mc.init_state(bundle, FSLConfig(num_clients=4),
+                       jax.random.PRNGKey(0))
     assert bytes_of(s4["servers"]) == 2 * bytes_of(s2["servers"])

@@ -9,7 +9,8 @@ import numpy as np
 from repro.configs.base import FSLConfig, SHAPES
 from repro.configs.registry import get_config
 from repro.core.bundle import transformer_bundle
-from repro.core.protocol import Trainer, init_state
+from repro.core.methods.cse_fsl import init_state
+from repro.core.trainer import Trainer
 from repro.launch.specs import train_batch_specs
 
 
@@ -50,11 +51,10 @@ def test_aggregation_cadence_c_greater_than_h():
     batcher = _Batcher(cfg, shape, fsl)
     state, _ = trainer.run(state, batcher, num_rounds=1)
     assert not _clients_synced(state)       # C=4 > h=2: no agg yet
-    state, _ = trainer.run(state, batcher, num_rounds=1)
-    # run() counts batches cumulatively only within one call; drive the agg
-    # manually for the second round to mirror 2h == C
-    state = trainer._agg(state)
-    assert _clients_synced(state)
+    # a 2-round run hits C=4 batches at round 2 and aggregates
+    state2, _ = trainer.run(trainer.init(), _Batcher(cfg, shape, fsl),
+                            num_rounds=2)
+    assert _clients_synced(state2)
 
 
 def test_partial_participation_batcher():
@@ -72,7 +72,7 @@ def test_partial_participation_batcher():
     trainer = Trainer(bundle, fsl, donate=False)
     state = trainer.init()
     batch = train_batch_specs(cfg, shape, fsl, as_spec=False)
-    state, m = trainer._round(state, batch, 0.05)
+    state, m = trainer.step(state, batch, 0.05)
     assert np.isfinite(float(m["client_loss"]))
 
 
@@ -80,7 +80,7 @@ def test_int8_smashed_end_to_end():
     """CSE-FSL round with int8 smashed upload stays finite and close to the
     full-precision round's server update."""
     cfg, _, bundle, shape = _setup(n=2, h=1)
-    from repro.core.protocol import make_round_step
+    from repro.core.methods.cse_fsl import make_round_step
     fsl_fp = FSLConfig(num_clients=2, h=1)
     fsl_q = FSLConfig(num_clients=2, h=1, smashed_dtype="int8")
     batch = train_batch_specs(cfg, shape, fsl_fp, as_spec=False)

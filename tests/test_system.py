@@ -14,11 +14,10 @@ import pytest
 
 from repro.common import bytes_of
 from repro.configs.base import FSLConfig
-from repro.core import baselines
-from repro.core.accounting import CommMeter, CostModel, comm_one_epoch, \
-    meter_aggregation, meter_round
+from repro.core.accounting import CommMeter, CostModel
 from repro.core.bundle import cnn_bundle
-from repro.core.protocol import Trainer
+from repro.core.methods import get_method
+from repro.core.trainer import Trainer
 from repro.data import FederatedBatcher, partition_dirichlet, partition_iid, \
     synthetic_classification
 from repro.models.cnn import CIFAR10
@@ -46,40 +45,31 @@ def test_cse_fsl_beats_fsl_an_at_equal_comm_budget():
                    aux=bytes_of(params_abs["aux"]))
 
     # --- CSE-FSL: h local batches per round, 1 upload per round
-    fsl = FSLConfig(num_clients=n, h=h, lr=0.05)
+    fsl = FSLConfig(num_clients=n, h=h, lr=0.05, lr_decay=1.0)
     trainer = Trainer(bundle, fsl, donate=False)
     state = trainer.init()
     batcher = FederatedBatcher(fed, bs, h, seed=0)
     meter_cse = CommMeter()
-    loss_cse = None
-    for rnd in range(10):
-        b = batcher.next_round()
-        state, m = trainer._round(state, (jnp.asarray(b[0]),
-                                          jnp.asarray(b[1])), 0.05)
-        state = trainer._agg(state)
-        for _ in range(n):
-            meter_round(meter_cse, cm, "cse_fsl", h, bs)
-        meter_aggregation(meter_cse, cm, "cse_fsl")
-        loss_cse = float(m["client_loss"])
+    state, hist = trainer.run(state, batcher, 10, log_every=1,
+                              meter=meter_cse, cost_model=cm)
+    loss_cse = hist[-1]["client_loss"]
 
     # --- FSL_AN: per-batch upload; stop when it has spent >= CSE's bytes
-    fsl1 = FSLConfig(num_clients=n, h=1, lr=0.05)
-    state_an = baselines.init_state(bundle, fsl1, jax.random.PRNGKey(0),
-                                    "fsl_an")
-    step = jax.jit(baselines.STEPS["fsl_an"](bundle, fsl1))
-    agg = jax.jit(baselines.make_aggregate("fsl_an"))
+    fsl1 = FSLConfig(num_clients=n, h=1, lr=0.05, lr_decay=1.0,
+                     method="fsl_an")
+    trainer_an = Trainer(bundle, fsl1, donate=False)
+    state_an = trainer_an.init()
+    profile_an = trainer_an.comm_profile(cm, bs)
     batcher2 = FederatedBatcher(fed, bs, 1, seed=0)
     meter_an = CommMeter()
     loss_an, batches_an = None, 0
     while meter_an.total < meter_cse.total and batches_an < 10 * h:
-        b = batcher2.next_round()
-        inputs = jnp.asarray(b[0][:, 0])
-        labels = jnp.asarray(b[1][:, 0])
-        state_an, m = step(state_an, (inputs, labels), 0.05)
-        state_an = agg(state_an)
-        for _ in range(n):
-            meter_round(meter_an, cm, "fsl_an", 1, bs)
-        meter_aggregation(meter_an, cm, "fsl_an")
+        state_an, m = trainer_an.step(state_an, batcher2.next_round(),
+                                      rnd=batches_an)
+        state_an = trainer_an.aggregate(state_an)
+        for kind in ("uplink_smashed", "uplink_labels", "downlink_grads"):
+            meter_an.log(kind, getattr(profile_an, kind))
+        meter_an.log("model_sync", profile_an.model_sync)
         loss_an = float(m["client_loss"])
         batches_an += 1
 
@@ -96,17 +86,17 @@ def test_storage_state_sizes_match_table2():
     params = bundle.init(key)
     w_s = bytes_of(params["server"])
 
-    from repro.core.protocol import init_state as cse_init
-    cse = cse_init(bundle, FSLConfig(num_clients=n), key)
+    fsl = FSLConfig(num_clients=n)
+    cse = get_method("cse_fsl").init_state(bundle, fsl, key)
     assert bytes_of(cse["server"]["params"]) == w_s          # 1 copy
 
-    mc = baselines.init_state(bundle, FSLConfig(num_clients=n), key, "fsl_mc")
+    mc = get_method("fsl_mc").init_state(bundle, fsl, key)
     assert bytes_of(mc["servers"]["params"]) == n * w_s      # n copies
 
-    an = baselines.init_state(bundle, FSLConfig(num_clients=n), key, "fsl_an")
+    an = get_method("fsl_an").init_state(bundle, fsl, key)
     assert bytes_of(an["servers"]["params"]) == n * w_s
 
-    oc = baselines.init_state(bundle, FSLConfig(num_clients=n), key, "fsl_oc")
+    oc = get_method("fsl_oc").init_state(bundle, fsl, key)
     assert bytes_of(oc["server"]["params"]) == w_s
 
 
@@ -176,7 +166,7 @@ def test_hlo_costs_counts_scan_trips():
     """hlo_costs counts dot FLOPs inside while bodies trip-aware, where
     cost_analysis visits the body once."""
     from jax import lax
-    from repro.launch.roofline import hlo_costs
+    from repro.launch.roofline import cost_analysis_dict, hlo_costs
 
     def f(x, w):
         def body(c, _):
@@ -190,4 +180,4 @@ def test_hlo_costs_counts_scan_trips():
     got = hlo_costs(c.as_text())
     analytic = 7 * 2 * 64 * 64 * 64
     assert got["flops"] == analytic, (got["flops"], analytic)
-    assert float(c.cost_analysis()["flops"]) < analytic  # body-once
+    assert float(cost_analysis_dict(c).get("flops", 0.0)) < analytic  # body-once
