@@ -1,10 +1,21 @@
-"""Paper Fig. 6: ordered vs randomly-ordered client arrivals.
+"""Paper Fig. 6: event-driven client arrivals in permuted orders.
 
-The event-triggered server update consumes smashed batches in arrival
+The AsyncTrainer consumes smashed uploads event-triggered in arrival
 order; Fig. 6 claims the final accuracy is insensitive to that order.  We
-run the same CSE-FSL training twice — natural order and per-round random
-permutations of the client axis — and compare accuracy and final server
-params.
+train the same CSE-FSL model (same init seed, same batch stream, ONE
+jitted trainer) under several latency traces — each yields different
+per-round arrival permutations — and compare final accuracy and server
+params.  In CSE-FSL the client side never waits on the server, so the
+client trajectories are bitwise identical across traces and the entire
+spread is server update-order noise.
+
+The paper's full CIFAR-10 CNN cannot be trained to convergence in an
+offline benchmark budget (see fig45: ~0.14 top-1 after 12 rounds), and an
+un-converged model's near-zero decision margins flip under any
+perturbation; Fig. 6 is a statement about the *trained* model, so this
+benchmark uses a reduced CNN + stronger planted signal that the protocol
+trains to convergence in ~50 rounds, where the order-insensitivity claim
+is measurable at the 1e-3 level.
 """
 from __future__ import annotations
 
@@ -15,62 +26,67 @@ import numpy as np
 from benchmarks.common import banner, save, table
 from repro.common import global_norm
 from repro.configs.base import FSLConfig
+from repro.core.async_trainer import AsyncTrainer, LognormalLatency
 from repro.core.bundle import cnn_bundle
-from repro.core.trainer import Trainer
 from repro.data import FederatedBatcher, partition_iid, \
     synthetic_classification
 from repro.models import cnn as cnn_mod
-from repro.models.cnn import CIFAR10
+from repro.models.cnn import CNNConfig
 
-
-def accuracy(params, x, y):
-    sm = cnn_mod.client_forward(CIFAR10, params["client"], jnp.asarray(x))
-    logits = cnn_mod.server_forward(CIFAR10, params["server"], sm)
-    return float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(y)))
-
-
-def run(order: str, rounds: int = 6, n: int = 4, h: int = 2, seed: int = 0):
-    bundle = cnn_bundle(CIFAR10)
-    x, y = synthetic_classification(1200, CIFAR10.in_shape, 10, signal=12.0)
-    fed = partition_iid(x, y, n)
-    xt, yt = synthetic_classification(500, CIFAR10.in_shape, 10, seed=99,
-                                      signal=12.0)
-    fsl = FSLConfig(num_clients=n, h=h, lr=0.05)
-    trainer = Trainer(bundle, fsl, donate=False)
-    state = trainer.init(seed)
-    batcher = FederatedBatcher(fed, 24, h, seed=seed)
-    rng = np.random.default_rng(7)
-    for rnd in range(rounds):
-        inputs, labels = batcher.next_round()
-        inputs, labels = jnp.asarray(inputs), jnp.asarray(labels)
-        if order == "random":
-            # permute client arrival order: the server's sequential scan
-            # then consumes smashed data in this order.
-            perm = jnp.asarray(rng.permutation(n))
-            state["clients"] = jax.tree_util.tree_map(lambda a: a[perm],
-                                                      state["clients"])
-            inputs = jax.tree_util.tree_map(lambda a: a[perm], inputs)
-            labels = labels[perm]
-        state, m = trainer.step(state, (inputs, labels), rnd=rnd)
-        state = trainer.aggregate(state)
-    params = trainer.merged_params(state)
-    return accuracy(params, xt, yt), state["server"]["params"]
+LATENCY_SEEDS = (1, 2, 3)
+ROUNDS, N, H = 50, 4, 5
+CNN = CNNConfig("fig6_cnn", (12, 12, 3), 10, conv_channels=(16, 32),
+                kernel=3, server_widths=(64,), lrn=False)
 
 
 def main():
-    acc_o, sp_o = run("ordered")
-    acc_r, sp_r = run("random")
-    diff = jax.tree_util.tree_map(
-        lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32), sp_o, sp_r)
-    rel = float(global_norm(diff)) / float(global_norm(sp_o))
-    rows = [{"order": "ordered", "acc": round(acc_o, 4)},
-            {"order": "random", "acc": round(acc_r, 4)}]
-    banner("Fig 6 — asynchronous arrival-order invariance")
-    table(rows, ["order", "acc"])
-    print(f"relative server-param distance: {rel:.4f}")
-    assert abs(acc_o - acc_r) < 0.08, (acc_o, acc_r)
-    out = {"ordered_acc": acc_o, "random_acc": acc_r,
-           "server_param_rel_distance": rel}
+    bundle = cnn_bundle(CNN)
+    x, y = synthetic_classification(1200, CNN.in_shape, 10, signal=20.0)
+    fed = partition_iid(x, y, N)
+    xt, yt = synthetic_classification(4000, CNN.in_shape, 10, seed=99,
+                                      signal=20.0)
+    xt, yt = jnp.asarray(xt), jnp.asarray(yt)
+    fsl = FSLConfig(num_clients=N, h=H, lr=3e-3, optimizer="adam")
+    latency = LognormalLatency(sigma=1.0, spread=1.0)
+    trainer = AsyncTrainer(bundle, fsl)    # one trainer: jit once, replay
+
+    accs, servers, orders = {}, {}, {}
+    for ls in LATENCY_SEEDS:
+        trace = latency.draw(np.random.default_rng(ls), ROUNDS, N,
+                             trainer.hooks.uploads_per_round)
+        state = trainer.init(0)
+        batcher = FederatedBatcher(fed, 24, H, seed=0)
+        state, _ = trainer.run(state, batcher, ROUNDS, trace=trace)
+        params = trainer.merged_params(state)
+        sm = cnn_mod.client_forward(CNN, params["client"], xt)
+        logits = cnn_mod.server_forward(CNN, params["server"], sm)
+        accs[ls] = float(jnp.mean(jnp.argmax(logits, -1) == yt))
+        servers[ls] = state["server"]["params"]
+        orders[ls] = tuple(trainer.stats.arrival_order)
+
+    # the latency traces must actually permute the consumption order,
+    # otherwise the invariance claim is vacuous
+    assert len(set(orders.values())) > 1, orders
+    ref = LATENCY_SEEDS[0]
+    rows = []
+    for ls in LATENCY_SEEDS:
+        diff = jax.tree_util.tree_map(
+            lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+            servers[ref], servers[ls])
+        rel = float(global_norm(diff)) / float(global_norm(servers[ref]))
+        rows.append({"arrival_order": "".join(map(str, orders[ls])),
+                     "acc": round(accs[ls], 4),
+                     "server_rel_dist": round(rel, 5)})
+    banner("Fig 6 — asynchronous arrival-order invariance (AsyncTrainer)")
+    table(rows, ["arrival_order", "acc", "server_rel_dist"])
+    spread = max(accs.values()) - min(accs.values())
+    print(f"final-accuracy spread across {len(LATENCY_SEEDS)} arrival "
+          f"permutations: {spread:.5f}")
+    assert spread < 1e-3, accs
+    out = {"accs": {str(k): v for k, v in accs.items()},
+           "orders": {str(k): "".join(map(str, v))
+                      for k, v in orders.items()},
+           "accuracy_spread": spread}
     save("fig6_async_order", out)
     return out
 

@@ -2,10 +2,17 @@
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
 #
-# Public API: the FSLMethod registry + the method-agnostic Trainer.
-from repro.core.methods import (CommProfile, FSLMethod, available_methods,
-                                get_method, register)
-from repro.core.trainer import Trainer
+# Public API: the FSLMethod registry, the method-agnostic sync Trainer, and
+# the event-driven AsyncTrainer + its latency models.
+from repro.core.async_trainer import (AsyncStats, AsyncTrainer,
+                                      ConstantLatency, LatencyModel,
+                                      LatencyTrace, LognormalLatency,
+                                      StragglerLatency, make_latency)
+from repro.core.methods import (AsyncHooks, CommProfile, FSLMethod,
+                                available_methods, get_method, register)
+from repro.core.trainer import AggregationCadence, Trainer
 
-__all__ = ["CommProfile", "FSLMethod", "available_methods", "get_method",
-           "register", "Trainer"]
+__all__ = ["AggregationCadence", "AsyncHooks", "AsyncStats", "AsyncTrainer",
+           "CommProfile", "ConstantLatency", "FSLMethod", "LatencyModel",
+           "LatencyTrace", "LognormalLatency", "StragglerLatency", "Trainer",
+           "available_methods", "get_method", "make_latency", "register"]

@@ -1,0 +1,419 @@
+"""Event-driven wall-clock execution engine for federated split learning.
+
+The SPMD :class:`~repro.core.trainer.Trainer` runs clients in lockstep;
+this module simulates the paper's *wall-clock* story (Fig. 3/6, Eq. 11-13)
+as a first-class subsystem: every client has a pluggable compute/network
+latency profile, uploads land on a priority queue, and the server consumes
+them **event-triggered in arrival order** — the synchronous barrier and
+its straggler overhead are reported as the counterfactual.
+
+  at = AsyncTrainer(bundle, fsl, latency=LognormalLatency(), seed=0)
+  state = at.init(seed=0)
+  state, history = at.run(state, batcher, num_rounds=20, log_every=5)
+  params = at.merged_params(state)
+  print(at.stats.as_dict())          # async vs barrier wall-clock, idle time
+
+Design notes:
+
+- method-agnostic: any registered :class:`FSLMethod` that implements
+  ``make_async_hooks`` (all four paper methods do) runs through the same
+  engine; blocking methods (gradient download) model the per-batch
+  client/server round trips, non-blocking methods stream uploads.
+- per-client state is kept as *slices of the same stacked pytrees* the
+  SPMD path uses — ``init`` is literally ``FSLMethod.init_state`` — so
+  sync and async runs are comparable seed for seed, and aggregation reuses
+  the method's jitted FedAvg on the restacked state.
+- aggregation fires on the shared :class:`AggregationCadence` (threshold
+  crossing of C per-client batches, resumed from ``state["round"]``), so a
+  zero-latency async run realizes the identical aggregation schedule as
+  the sync Trainer, including when C is not a multiple of h.
+- determinism: the latency trace is drawn up front from a seeded
+  generator in an arrival-independent order; same seed + same trace =>
+  bitwise-identical final params.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Any, Callable, Dict, List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FSLConfig
+from repro.core.accounting import CommMeter, CostModel
+from repro.core.bundle import SplitModelBundle
+from repro.core.methods import CommProfile, FSLMethod, get_method
+from repro.core.trainer import AggregationCadence
+
+# ---------------------------------------------------------------------------
+# Latency models
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyTrace:
+    """Pre-drawn per-event timings, all shaped [rounds, n_clients, K].
+
+    K = the method's ``uploads_per_round``; ``compute[r, c, k]`` is client
+    c's local compute time for upload unit k of round r, ``up``/``down``
+    the uplink/downlink latencies.  Drawing the full trace up front (in an
+    arrival-independent order) is what makes runs bitwise-reproducible and
+    lets two runs share one trace exactly.
+    """
+    compute: np.ndarray
+    up: np.ndarray
+    down: np.ndarray
+
+    @property
+    def shape(self):
+        return self.compute.shape
+
+
+class LatencyModel:
+    """Interface: ``draw(rng, rounds, n, k) -> LatencyTrace``."""
+
+    def draw(self, rng: np.random.Generator, rounds: int, n: int,
+             k: int) -> LatencyTrace:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstantLatency(LatencyModel):
+    """Fixed timings; ``ConstantLatency(0, 0, 0)`` is the zero-latency
+    profile whose event order degenerates to the synchronous schedule."""
+    compute: float = 1.0
+    up: float = 0.1
+    down: float = 0.1
+
+    def draw(self, rng, rounds, n, k):
+        full = lambda v: np.full((rounds, n, k), float(v))
+        return LatencyTrace(full(self.compute), full(self.up),
+                            full(self.down))
+
+
+@dataclasses.dataclass(frozen=True)
+class LognormalLatency(LatencyModel):
+    """Lognormal per-event jitter around per-client mean speeds.
+
+    ``spread`` is the sigma of a *static* per-client speed factor (the
+    Fig. 3 device heterogeneity); ``sigma`` the per-event jitter.  Means
+    are bias-corrected so e.g. ``compute`` stays the expected value.
+    """
+    compute: float = 1.0
+    up: float = 0.1
+    down: float = 0.1
+    sigma: float = 0.5
+    spread: float = 0.5
+
+    def draw(self, rng, rounds, n, k):
+        speed = np.exp(rng.normal(-0.5 * self.spread ** 2, self.spread,
+                                  size=n))
+
+        def ln(mean):
+            j = rng.normal(-0.5 * self.sigma ** 2, self.sigma,
+                           size=(rounds, n, k))
+            return mean * np.exp(j)
+
+        return LatencyTrace(ln(self.compute) * speed[None, :, None],
+                            ln(self.up), ln(self.down))
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerLatency(LatencyModel):
+    """Straggler tail: a fixed fraction of clients (drawn once per trace)
+    computes ``slowdown`` times slower than the base model says."""
+    base: LatencyModel = dataclasses.field(default_factory=LognormalLatency)
+    frac: float = 0.25
+    slowdown: float = 8.0
+
+    def draw(self, rng, rounds, n, k):
+        tr = self.base.draw(rng, rounds, n, k)
+        num = max(1, int(round(self.frac * n)))
+        idx = rng.choice(n, size=num, replace=False)
+        compute = tr.compute.copy()
+        compute[:, idx, :] *= self.slowdown
+        return LatencyTrace(compute, tr.up, tr.down)
+
+
+LATENCY_MODELS = {"constant": ConstantLatency, "lognormal": LognormalLatency,
+                  "straggler": StragglerLatency}
+
+
+def make_latency(name: str, **kw) -> LatencyModel:
+    try:
+        return LATENCY_MODELS[name](**kw)
+    except KeyError:
+        raise KeyError(f"unknown latency model {name!r}; registered: "
+                       f"{tuple(sorted(LATENCY_MODELS))}") from None
+
+
+# ---------------------------------------------------------------------------
+# Wall-clock statistics
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class AsyncStats:
+    """Straggler / idle-time accounting for one ``AsyncTrainer.run``."""
+    rounds: int = 0
+    events: int = 0                 # server-consumed uploads
+    async_time: float = 0.0         # event-driven wall clock
+    sync_time: float = 0.0          # synchronous-barrier counterfactual
+    server_busy: float = 0.0        # shared-server service time
+    client_wait: float = 0.0        # blocking methods: time spent waiting
+    # client ids in first-round consumption order (the Fig. 6 permutation)
+    arrival_order: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def server_idle(self) -> float:
+        return max(self.async_time - self.server_busy, 0.0)
+
+    @property
+    def speedup(self) -> float:
+        """Barrier time / event-driven time (>1: stragglers removed)."""
+        return self.sync_time / self.async_time if self.async_time else 1.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"rounds": self.rounds, "events": self.events,
+                "async_time": self.async_time, "sync_time": self.sync_time,
+                "server_busy": self.server_busy,
+                "server_idle": self.server_idle,
+                "client_wait": self.client_wait, "speedup": self.speedup}
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+
+def _unit_batch(batch, c: int, k: int, bpu: int):
+    """Upload unit k of client c from a [n, h, B, ...] round batch:
+    ``[h, B, ...]`` when bpu == h (one upload per round), ``[B, ...]``
+    when bpu == 1 (per-batch uploads)."""
+    if bpu == 1:
+        return jax.tree_util.tree_map(lambda x: x[c, k], batch)
+    return jax.tree_util.tree_map(lambda x: x[c, k * bpu:(k + 1) * bpu],
+                                  batch)
+
+
+@dataclasses.dataclass
+class AsyncTrainer:
+    """Event-driven facade mirroring :class:`Trainer`:
+    ``init`` / ``run`` / ``merged_params`` (plus ``stats``).
+
+    ``latency`` shapes per-client compute/network timings; ``server_time``
+    is the server's service time per consumed upload; ``seed`` seeds the
+    latency trace (the model seed lives in ``init``), so (init seed,
+    latency seed) fully determine a run.
+
+    Note: the event engine always consumes uploads one at a time in
+    arrival order — ``fsl.server_update="batched"`` (a sync-path fusion)
+    has no async counterpart and is ignored here.
+    """
+    bundle: SplitModelBundle
+    fsl: FSLConfig
+    method: Optional[Union[str, FSLMethod]] = None  # default: fsl.method
+    latency: LatencyModel = dataclasses.field(default_factory=ConstantLatency)
+    server_time: float = 0.05
+    seed: int = 0
+
+    def __post_init__(self):
+        m = self.method if self.method is not None else self.fsl.method
+        if isinstance(m, str):
+            m = get_method(m)
+        self.method = m
+        self.hooks = m.make_async_hooks(self.bundle, self.fsl)
+        self._compute_fn = jax.jit(self.hooks.client_compute)
+        self._consume_fn = jax.jit(self.hooks.server_consume)
+        self._receive_fn = (jax.jit(self.hooks.client_receive)
+                            if self.hooks.client_receive is not None else None)
+        self._agg_fn = jax.jit(m.make_aggregate())
+        self._stacked_keys = ("clients",) if self.hooks.server_shared \
+            else ("clients", self.hooks.server_key)
+        self.stats = AsyncStats()
+
+    # -- facade parity with Trainer -----------------------------------------
+    def init(self, seed: int = 0):
+        return self.method.init_state(self.bundle, self.fsl,
+                                      jax.random.PRNGKey(seed))
+
+    def lr_at(self, rnd: int) -> float:
+        steps = rnd // self.fsl.lr_decay_every
+        return self.fsl.lr * self.fsl.lr_decay ** steps
+
+    def merged_params(self, state):
+        """Deployable {"client", ["aux",] "server"} params for evaluation."""
+        return self.method.merged_params(state)
+
+    def comm_profile(self, cost_model: CostModel,
+                     batch_size: int) -> CommProfile:
+        return self.method.comm_profile(cost_model, self.fsl, batch_size)
+
+    # -- state <-> per-client slices ----------------------------------------
+    def _split(self, state):
+        n = self.fsl.num_clients
+        slices = [{k: jax.tree_util.tree_map(lambda x: x[c], state[k])
+                   for k in self._stacked_keys} for c in range(n)]
+        shared = state[self.hooks.server_key] if self.hooks.server_shared \
+            else None
+        return slices, shared
+
+    def _join(self, state, slices, shared, round_val: int):
+        out = dict(state)
+        for k in self._stacked_keys:
+            out[k] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *[s[k] for s in slices])
+        if self.hooks.server_shared:
+            out[self.hooks.server_key] = shared
+        out["round"] = jnp.asarray(round_val, jnp.int32)
+        return out
+
+    # -- the loop -----------------------------------------------------------
+    def run(self, state, batcher, num_rounds: int, log_every: int = 0,
+            callback=None, meter: Optional[CommMeter] = None,
+            cost_model: Optional[CostModel] = None,
+            trace: Optional[LatencyTrace] = None):
+        """Run ``num_rounds`` global rounds event-driven.
+
+        Same contract as ``Trainer.run`` (aggregation on the C-batch
+        threshold-crossing cadence resumed from ``state["round"]``,
+        ``log_every`` history rows with an ``aggregated`` flag, CommMeter
+        integration).  ``trace`` overrides the latency trace — pass the
+        same trace to two runs to replay identical wall-clock conditions.
+        """
+        fsl, hooks = self.fsl, self.hooks
+        n, K = fsl.num_clients, hooks.uploads_per_round
+        start_batches = self.method.batches_trained(fsl, state)
+        cadence = AggregationCadence(fsl.resolved_agg_every, start_batches)
+        rnd0 = start_batches // fsl.h
+        round_val = int(state["round"])
+        if trace is None:
+            trace = self.latency.draw(np.random.default_rng(self.seed),
+                                      num_rounds, n, K)
+        if trace.shape != (num_rounds, n, K):
+            raise ValueError(f"latency trace shape {trace.shape} != "
+                             f"{(num_rounds, n, K)}")
+        self.stats = AsyncStats()
+        slices, shared = self._split(state)
+        history = []
+        profile = None
+        for r in range(num_rounds):
+            batch = batcher.next_round()
+            if meter is not None and cost_model is not None and profile is None:
+                batch_size = jax.tree_util.tree_leaves(batch[1])[0].shape[2]
+                profile = self.comm_profile(cost_model, batch_size)
+            lr = self.lr_at(rnd0 + r)
+            shared, metrics = self._run_round(
+                slices, shared, batch, lr, trace.compute[r], trace.up[r],
+                trace.down[r])
+            self.stats.rounds += 1
+            round_val += K
+            if profile is not None:
+                meter.log("uplink_smashed", profile.uplink_smashed)
+                meter.log("uplink_labels", profile.uplink_labels)
+                meter.log("downlink_grads", profile.downlink_grads)
+            aggregated = cadence.advance(fsl.h)
+            if aggregated:
+                state = self._join(state, slices, shared, round_val)
+                state = self._agg_fn(state)
+                slices, shared = self._split(state)
+                if profile is not None:
+                    meter.log("model_sync", profile.model_sync)
+            if log_every and (r + 1) % log_every == 0:
+                m = {k: float(v) for k, v in metrics.items()}
+                row: dict = {"round": rnd0 + r + 1, **m,
+                             "aggregated": aggregated}
+                if meter is not None:
+                    row["comm_bytes"] = meter.total
+                history.append(row)
+                if callback:
+                    callback(rnd0 + r + 1, m,
+                             self._join(state, slices, shared, round_val))
+        return self._join(state, slices, shared, round_val), history
+
+    def _run_round(self, slices: List[Dict[str, Any]], shared, batch,
+                   lr: float, comp: np.ndarray, up: np.ndarray,
+                   down: np.ndarray):
+        """One global round of the event simulation: client transactions
+        feed a priority queue of upload arrivals; the server services them
+        in arrival order (FIFO on ties, so zero latency reproduces the
+        synchronous order).  Returns (shared', mean metrics)."""
+        hooks, st = self.hooks, self.stats
+        n, K, bpu = len(slices), hooks.uploads_per_round, \
+            hooks.batches_per_upload
+        blocking = self._receive_fn is not None
+        heap: list = []
+        seq = itertools.count()
+        next_k = [0] * n
+        client_t = [0.0] * n        # per-client local clock
+        metric_sums: Dict[str, float] = {}
+        metric_cnt: Dict[str, int] = {}
+
+        def tally(md):
+            for key, v in md.items():
+                metric_sums[key] = metric_sums.get(key, 0.0) + float(v)
+                metric_cnt[key] = metric_cnt.get(key, 0) + 1
+
+        def launch(c: int):
+            """Client c computes its next upload unit and ships it."""
+            k = next_k[c]
+            cslice, upload, pending, m = self._compute_fn(
+                slices[c], _unit_batch(batch, c, k, bpu), lr)
+            slices[c] = cslice
+            tally(m)
+            client_t[c] += float(comp[c, k])
+            heapq.heappush(heap, (client_t[c] + float(up[c, k]),
+                                  next(seq), c, k, upload, pending))
+            next_k[c] = k + 1
+
+        for c in range(n):
+            if blocking:
+                launch(c)           # next unit only after the reply lands
+            else:
+                for _ in range(K):
+                    launch(c)       # local-only phase: stream all uploads
+
+        server_free = 0.0
+        replica_free = [0.0] * n
+        t_end = 0.0
+        while heap:
+            t_arrive, _, c, k, upload, pending = heapq.heappop(heap)
+            if st.rounds == 0:
+                st.arrival_order.append(c)
+            free = server_free if hooks.server_shared else replica_free[c]
+            t_done = max(t_arrive, free) + self.server_time
+            sstate = shared if hooks.server_shared \
+                else slices[c][hooks.server_key]
+            sstate, reply, m = self._consume_fn(sstate, upload, lr)
+            tally(m)
+            st.events += 1
+            st.server_busy += self.server_time
+            if hooks.server_shared:
+                shared, server_free = sstate, t_done
+            else:
+                slices[c][hooks.server_key] = sstate
+                replica_free[c] = t_done
+            t_end = max(t_end, t_done)
+            if blocking:
+                t_reply = t_done + float(down[c, k])
+                slices[c] = self._receive_fn(slices[c], pending, reply, lr)
+                st.client_wait += t_reply - client_t[c]
+                client_t[c] = t_reply
+                t_end = max(t_end, t_reply)
+                if next_k[c] < K:
+                    launch(c)
+
+        st.async_time += max([t_end] + client_t)
+        # barrier counterfactual: every upload unit waits for the slowest
+        # client, then the server drains all n uploads back to back.
+        for k in range(K):
+            st.sync_time += comp[:, k].max() + up[:, k].max() \
+                + n * self.server_time
+            if blocking:
+                st.sync_time += down[:, k].max()
+        means = {key: metric_sums[key] / metric_cnt[key]
+                 for key in metric_sums}
+        return shared, means

@@ -61,6 +61,44 @@ class CommProfile:
 
 
 # ---------------------------------------------------------------------------
+# Async / event-driven decomposition (AsyncTrainer)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncHooks:
+    """A method's decomposition of one global round into wall-clock events.
+
+    The event engine (:class:`repro.core.async_trainer.AsyncTrainer`) runs
+    ``uploads_per_round`` *transactions* per client per round; transaction k
+    of client c covers ``batches_per_upload`` local mini-batches:
+
+    1. ``client_compute(cslice, cbatch, lr)
+       -> (cslice', upload, pending, metrics)`` — the client's local work
+       for one upload unit.  ``cslice`` is that client's slice of the
+       stacked state (its server replica included when the method is
+       server-replicated); ``upload`` is the pytree that crosses the
+       uplink; ``pending`` is client-side context held until the server's
+       reply (None for non-blocking methods).
+    2. ``server_consume(sstate, upload, lr) -> (sstate', reply, metrics)``
+       — applied event-triggered in ARRIVAL order (paper Eq. 11-13).
+       ``sstate`` is the shared server state when ``server_shared``, else
+       the client's own replica slice.  ``reply`` is the downlink payload
+       (cut-layer gradients) or None.
+    3. ``client_receive(cslice, pending, reply, lr) -> cslice'`` — only
+       for blocking methods (gradient download); the client cannot start
+       transaction k+1 before it runs.
+    """
+    client_compute: Callable
+    server_consume: Callable
+    client_receive: Optional[Callable] = None
+    uploads_per_round: int = 1
+    batches_per_upload: int = 1
+    server_key: str = "server"
+    server_shared: bool = True
+
+
+# ---------------------------------------------------------------------------
 # The method interface
 # ---------------------------------------------------------------------------
 
@@ -92,6 +130,24 @@ class FSLMethod:
 
     def merged_params(self, state) -> Dict[str, Any]:
         raise NotImplementedError
+
+    # -- async / event-driven execution ------------------------------------
+    def make_async_hooks(self, bundle: SplitModelBundle,
+                         fsl: FSLConfig) -> AsyncHooks:
+        """Decompose one global round into event-engine hooks (see
+        :class:`AsyncHooks`).  All four paper methods implement this; a new
+        method may leave it unimplemented and remain sync-only."""
+        raise NotImplementedError(
+            f"method {self.name!r} defines no async decomposition")
+
+    def batches_trained(self, fsl: FSLConfig, state) -> int:
+        """Local mini-batches each client has trained so far, recovered
+        from ``state["round"]``.  Per-batch methods advance the counter
+        once per inner mini-batch (``scan_over_h``), CSE-FSL once per
+        global round of ``h`` batches — this inverts that, so a resumed
+        ``Trainer.run`` keeps the paper's C-batch aggregation schedule."""
+        r = int(state["round"])
+        return r if self.uploads_every_batch else r * fsl.h
 
     # -- accounting --------------------------------------------------------
     def comm_profile(self, cm: CostModel, fsl: FSLConfig,

@@ -26,8 +26,8 @@ from jax import lax
 
 from repro.configs.base import FSLConfig
 from repro.core.bundle import SplitModelBundle
-from repro.core.methods.base import (FSLMethod, client_mean, fedavg, register,
-                                     stack_clients)
+from repro.core.methods.base import (AsyncHooks, FSLMethod, client_mean,
+                                     fedavg, register, stack_clients)
 from repro.optim import make_optimizer
 
 # ---------------------------------------------------------------------------
@@ -69,16 +69,11 @@ def quantize_smashed(smashed, dtype: str):
 # ---------------------------------------------------------------------------
 
 
-def make_round_step(bundle: SplitModelBundle, fsl: FSLConfig,
-                    server_constraint=None):
-    """Returns ``round_step(state, batch, lr) -> (state, metrics)``.
-
-    batch: (inputs, labels) pytrees with leading dims [n_clients, h, B, ...].
-    ``server_constraint``: optional fn(tree) -> tree applying a sharding
-    constraint to each per-client (smashed, labels) the sequential server
-    scan consumes — the §Perf fix for the data-axis sitting idle during
-    the faithful event-triggered update (see EXPERIMENTS.md §Perf).
-    """
+def make_client_round(bundle: SplitModelBundle, fsl: FSLConfig):
+    """One client's local phase (Alg. 1): ``client_round(cstate, cbatch, lr)
+    -> (cstate', smashed, last_labels, mean_loss)`` over ``[h, B, ...]``.
+    Vmapped by the sync round step; called per client slice by the async
+    engine — same numerics either way."""
     _, opt_update = make_optimizer(fsl.optimizer)
 
     def client_round(cstate, cbatch, lr):
@@ -105,6 +100,22 @@ def make_round_step(bundle: SplitModelBundle, fsl: FSLConfig,
         smashed = quantize_smashed(smashed, fsl.smashed_dtype)
         return ({"params": params, "opt": opt}, smashed, last_labels,
                 jnp.mean(losses))
+
+    return client_round
+
+
+def make_round_step(bundle: SplitModelBundle, fsl: FSLConfig,
+                    server_constraint=None):
+    """Returns ``round_step(state, batch, lr) -> (state, metrics)``.
+
+    batch: (inputs, labels) pytrees with leading dims [n_clients, h, B, ...].
+    ``server_constraint``: optional fn(tree) -> tree applying a sharding
+    constraint to each per-client (smashed, labels) the sequential server
+    scan consumes — the §Perf fix for the data-axis sitting idle during
+    the faithful event-triggered update (see EXPERIMENTS.md §Perf).
+    """
+    _, opt_update = make_optimizer(fsl.optimizer)
+    client_round = make_client_round(bundle, fsl)
 
     def server_update(sstate, smashed, labels, lr):
         """smashed: [n, B, ...]; labels: [n, B, ...]."""
@@ -166,6 +177,33 @@ def merged_params(state) -> Dict[str, Any]:
             "server": state["server"]["params"]}
 
 
+def make_async_hooks(bundle: SplitModelBundle, fsl: FSLConfig) -> AsyncHooks:
+    """Event decomposition (paper Fig. 3): one upload per client per round
+    — h local steps, then the smashed batch crosses the uplink; the single
+    server consumes arrivals event-triggered in arrival order (Eq. 11-13).
+    Non-blocking: clients never wait for gradients."""
+    _, opt_update = make_optimizer(fsl.optimizer)
+    client_round = make_client_round(bundle, fsl)
+
+    def client_compute(cslice, cbatch, lr):
+        cstate, smashed, labels, loss = client_round(cslice["clients"],
+                                                     cbatch, lr)
+        return ({"clients": cstate}, (smashed, labels), None,
+                {"client_loss": loss})
+
+    def server_consume(sstate, upload, lr):
+        smashed, labels = upload
+        smashed = lax.stop_gradient(smashed)
+        loss, grads = jax.value_and_grad(bundle.server_loss)(
+            sstate["params"], smashed, labels)
+        params, opt = opt_update(grads, sstate["opt"], sstate["params"], lr)
+        return {"params": params, "opt": opt}, None, {"server_loss": loss}
+
+    return AsyncHooks(client_compute, server_consume,
+                      uploads_per_round=1, batches_per_upload=fsl.h,
+                      server_key="server", server_shared=True)
+
+
 # ---------------------------------------------------------------------------
 # Registered method
 # ---------------------------------------------------------------------------
@@ -192,3 +230,6 @@ class CSEFSL(FSLMethod):
 
     def merged_params(self, state):
         return merged_params(state)
+
+    def make_async_hooks(self, bundle, fsl):
+        return make_async_hooks(bundle, fsl)

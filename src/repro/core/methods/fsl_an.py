@@ -11,8 +11,9 @@ from jax import lax
 
 from repro.configs.base import FSLConfig
 from repro.core.bundle import SplitModelBundle
-from repro.core.methods.base import (FSLMethod, client_mean, fedavg, register,
-                                     scan_over_h, stack_clients)
+from repro.core.methods.base import (AsyncHooks, FSLMethod, client_mean,
+                                     fedavg, register, scan_over_h,
+                                     stack_clients)
 from repro.optim import make_optimizer
 
 
@@ -56,6 +57,37 @@ def make_batch_step(bundle: SplitModelBundle, fsl: FSLConfig):
     return step
 
 
+def make_async_hooks(bundle: SplitModelBundle, fsl: FSLConfig) -> AsyncHooks:
+    """Event decomposition: h per-batch uploads per round, non-blocking
+    (no gradient download), each consumed by the client's *own* server
+    replica — arrival order across clients cannot matter."""
+    _, opt_update = make_optimizer(fsl.optimizer)
+
+    def client_compute(cslice, cbatch, lr):
+        inputs, labels = cbatch
+        cstate = cslice["clients"]
+        (closs, _), gc = jax.value_and_grad(
+            lambda pr: bundle.client_loss(pr["params"], pr["aux"],
+                                          inputs, labels),
+            has_aux=True)(cstate["params"])
+        cp, copt = opt_update(gc, cstate["opt"], cstate["params"], lr)
+        smashed = lax.stop_gradient(bundle.client_smashed(cp["params"],
+                                                          inputs))
+        return ({**cslice, "clients": {"params": cp, "opt": copt}},
+                (smashed, labels), None, {"client_loss": closs})
+
+    def server_consume(sstate, upload, lr):
+        smashed, labels = upload
+        sloss, gs = jax.value_and_grad(bundle.server_loss)(
+            sstate["params"], smashed, labels)
+        sp, sopt = opt_update(gs, sstate["opt"], sstate["params"], lr)
+        return {"params": sp, "opt": sopt}, None, {"server_loss": sloss}
+
+    return AsyncHooks(client_compute, server_consume,
+                      uploads_per_round=fsl.h, batches_per_upload=1,
+                      server_key="servers", server_shared=False)
+
+
 @register
 class FSLAN(FSLMethod):
     name = "fsl_an"
@@ -80,3 +112,6 @@ class FSLAN(FSLMethod):
         cp = client_mean(state["clients"]["params"])
         return {"client": cp["params"], "aux": cp["aux"],
                 "server": client_mean(state["servers"]["params"])}
+
+    def make_async_hooks(self, bundle, fsl):
+        return make_async_hooks(bundle, fsl)

@@ -10,8 +10,9 @@ import jax.numpy as jnp
 
 from repro.configs.base import FSLConfig
 from repro.core.bundle import SplitModelBundle
-from repro.core.methods.base import (FSLMethod, client_mean, fedavg, register,
-                                     scan_over_h, stack_clients)
+from repro.core.methods.base import (AsyncHooks, FSLMethod, client_mean,
+                                     fedavg, register, scan_over_h,
+                                     stack_clients)
 from repro.optim import make_optimizer
 
 
@@ -49,6 +50,42 @@ def make_batch_step(bundle: SplitModelBundle, fsl: FSLConfig):
     return step
 
 
+def make_async_hooks(bundle: SplitModelBundle, fsl: FSLConfig) -> AsyncHooks:
+    """Event decomposition: h per-batch uploads, each BLOCKING on the cut
+    gradient from the client's own server replica.  The joint e2e gradient
+    of the sync path splits by the chain rule: the server computes
+    d loss/d smashed and sends it down; the client back-propagates it
+    through its stage (vjp)."""
+    from jax import lax
+
+    _, opt_update = make_optimizer(fsl.optimizer)
+
+    def client_compute(cslice, cbatch, lr):
+        inputs, labels = cbatch
+        smashed = bundle.client_smashed(cslice["clients"]["params"], inputs)
+        return (cslice, (lax.stop_gradient(smashed), labels), inputs, {})
+
+    def server_consume(sstate, upload, lr):
+        smashed, labels = upload
+        loss, (gs, gsm) = jax.value_and_grad(
+            bundle.server_loss, argnums=(0, 1))(sstate["params"], smashed,
+                                                labels)
+        sp, sopt = opt_update(gs, sstate["opt"], sstate["params"], lr)
+        return {"params": sp, "opt": sopt}, gsm, {"loss": loss}
+
+    def client_receive(cslice, pending, reply, lr):
+        cstate = cslice["clients"]
+        _, vjp = jax.vjp(lambda p: bundle.client_smashed(p, pending),
+                         cstate["params"])
+        (gc,) = vjp(reply)
+        cp, copt = opt_update(gc, cstate["opt"], cstate["params"], lr)
+        return {**cslice, "clients": {"params": cp, "opt": copt}}
+
+    return AsyncHooks(client_compute, server_consume, client_receive,
+                      uploads_per_round=fsl.h, batches_per_upload=1,
+                      server_key="servers", server_shared=False)
+
+
 @register
 class FSLMC(FSLMethod):
     name = "fsl_mc"
@@ -74,3 +111,6 @@ class FSLMC(FSLMethod):
     def merged_params(self, state):
         return {"client": client_mean(state["clients"]["params"]),
                 "server": client_mean(state["servers"]["params"])}
+
+    def make_async_hooks(self, bundle, fsl):
+        return make_async_hooks(bundle, fsl)

@@ -11,8 +11,9 @@ from jax import lax
 
 from repro.configs.base import FSLConfig
 from repro.core.bundle import SplitModelBundle
-from repro.core.methods.base import (FSLMethod, client_mean, fedavg, register,
-                                     scan_over_h, stack_clients)
+from repro.core.methods.base import (AsyncHooks, FSLMethod, client_mean,
+                                     fedavg, register, scan_over_h,
+                                     stack_clients)
 from repro.optim import clip_by_global_norm, make_optimizer
 
 
@@ -77,6 +78,43 @@ def make_batch_step(bundle: SplitModelBundle, fsl: FSLConfig,
     return step
 
 
+def make_async_hooks(bundle: SplitModelBundle, fsl: FSLConfig) -> AsyncHooks:
+    """Event decomposition: h per-batch uploads against the ONE shared
+    server, serviced in arrival order, each BLOCKING on the cut-gradient
+    download — the straggler-amplifying round trips CSE-FSL removes.
+    Clipping mirrors the sync path: server grads clipped before the server
+    step, client grads clipped after the vjp."""
+    _, opt_update = make_optimizer(fsl.optimizer)
+    clip = fsl.grad_clip or 1.0
+
+    def client_compute(cslice, cbatch, lr):
+        inputs, labels = cbatch
+        smashed = bundle.client_smashed(cslice["clients"]["params"], inputs)
+        return (cslice, (lax.stop_gradient(smashed), labels), inputs, {})
+
+    def server_consume(sstate, upload, lr):
+        smashed, labels = upload
+        loss, (gs, gsm) = jax.value_and_grad(
+            bundle.server_loss, argnums=(0, 1))(sstate["params"], smashed,
+                                                labels)
+        gs, _ = clip_by_global_norm(gs, clip)
+        sp, sopt = opt_update(gs, sstate["opt"], sstate["params"], lr)
+        return {"params": sp, "opt": sopt}, gsm, {"loss": loss}
+
+    def client_receive(cslice, pending, reply, lr):
+        cstate = cslice["clients"]
+        _, vjp = jax.vjp(lambda p: bundle.client_smashed(p, pending),
+                         cstate["params"])
+        (gc,) = vjp(reply)
+        gc, _ = clip_by_global_norm(gc, clip)
+        cp, copt = opt_update(gc, cstate["opt"], cstate["params"], lr)
+        return {**cslice, "clients": {"params": cp, "opt": copt}}
+
+    return AsyncHooks(client_compute, server_consume, client_receive,
+                      uploads_per_round=fsl.h, batches_per_upload=1,
+                      server_key="server", server_shared=True)
+
+
 @register
 class FSLOC(FSLMethod):
     name = "fsl_oc"
@@ -100,3 +138,6 @@ class FSLOC(FSLMethod):
     def merged_params(self, state):
         return {"client": client_mean(state["clients"]["params"]),
                 "server": state["server"]["params"]}
+
+    def make_async_hooks(self, bundle, fsl):
+        return make_async_hooks(bundle, fsl)

@@ -28,6 +28,32 @@ from repro.core.bundle import SplitModelBundle
 from repro.core.methods import CommProfile, FSLMethod, get_method
 
 
+class AggregationCadence:
+    """The paper's every-C-batches aggregation schedule (Eq. 14 cadence).
+
+    Aggregation fires whenever the cumulative per-client batch count
+    crosses a multiple of C — *threshold crossing*, not ``count % C == 0``,
+    so the schedule is correct also when C is not a multiple of the round
+    granularity h (a round that crosses a threshold fires exactly one
+    aggregation; ``% C`` would fire late or never, e.g. h=3, C=2).
+    Shared by the synchronous :class:`Trainer` and the event-driven
+    :class:`repro.core.async_trainer.AsyncTrainer` so both realize the
+    identical schedule for the same (h, C) — zero-latency async runs are
+    comparable to sync runs round for round.
+    """
+
+    def __init__(self, agg_every: int, batches_done: int = 0):
+        self.agg_every = agg_every
+        self.batches_done = batches_done
+
+    def advance(self, num_batches: int) -> bool:
+        """Account ``num_batches`` more per-client batches; True if an
+        aggregation threshold was crossed."""
+        prev = self.batches_done
+        self.batches_done += num_batches
+        return self.batches_done // self.agg_every > prev // self.agg_every
+
+
 @dataclasses.dataclass
 class Trainer:
     bundle: SplitModelBundle
@@ -82,19 +108,25 @@ class Trainer:
             cost_model: Optional[CostModel] = None):
         """Run ``num_rounds`` global rounds.
 
-        - aggregation fires every C batches (``fsl.resolved_agg_every``),
-          counted from the start of this call;
+        - aggregation fires every C batches (``fsl.resolved_agg_every``) on
+          threshold crossing, resumed from ``state["round"]`` — a restarted
+          run keeps the paper's C-batch schedule (and its lr schedule)
+          instead of recounting from the start of the call;
         - ``callback(rnd, metrics, state)`` fires on the ``log_every``
-          cadence, after aggregation, with float-cast metrics;
+          cadence, after aggregation, with float-cast metrics (``rnd`` is
+          the global round index, resume-aware);
         - with ``meter`` + ``cost_model``, per-round and per-aggregation
           bytes from the method's CommProfile are logged and a
-          ``comm_bytes`` running total is added to the history rows.
+          ``comm_bytes`` running total is added to the history rows; each
+          row also records whether that round ``aggregated``.
         """
-        batches_done = 0
-        agg_every = self.fsl.resolved_agg_every
+        start_batches = self.method.batches_trained(self.fsl, state)
+        cadence = AggregationCadence(self.fsl.resolved_agg_every,
+                                     start_batches)
+        rnd0 = start_batches // self.fsl.h
         history = []
         profile = None
-        for rnd in range(num_rounds):
+        for rnd in range(rnd0, rnd0 + num_rounds):
             batch = batcher.next_round()
             if meter is not None and cost_model is not None and profile is None:
                 batch_size = jax.tree_util.tree_leaves(batch[1])[0].shape[2]
@@ -104,14 +136,14 @@ class Trainer:
                 meter.log("uplink_smashed", profile.uplink_smashed)
                 meter.log("uplink_labels", profile.uplink_labels)
                 meter.log("downlink_grads", profile.downlink_grads)
-            batches_done += self.fsl.h
-            if batches_done % agg_every == 0:
+            aggregated = cadence.advance(self.fsl.h)
+            if aggregated:
                 state = self.agg_fn(state)
                 if profile is not None:
                     meter.log("model_sync", profile.model_sync)
-            if log_every and (rnd + 1) % log_every == 0:
+            if log_every and (rnd + 1 - rnd0) % log_every == 0:
                 m = {k: float(v) for k, v in metrics.items()}
-                row: dict = {"round": rnd + 1, **m}
+                row: dict = {"round": rnd + 1, **m, "aggregated": aggregated}
                 if meter is not None:
                     row["comm_bytes"] = meter.total
                 history.append(row)

@@ -49,16 +49,27 @@ def synthetic_classification(num_samples: int, input_shape: Tuple[int, ...],
 
 
 def synthetic_lm(num_samples: int, seq_len: int, vocab: int, seed: int = 0,
-                 order: int = 3):
-    """Token sequences from a sparse random Markov chain (learnable)."""
+                 order: int = 1):
+    """Token sequences from a sparse random order-``order`` Markov chain.
+
+    With probability 0.8 the next token is a fixed permutation of a mix of
+    the previous token and the token ``order`` steps back, so next-token
+    prediction is learnable above chance.  ``order=1`` (the default) keeps
+    the next token fully determined by its predecessor (peaked bigrams);
+    higher orders spread the bigram distribution — the 0.8-probable
+    continuation is only recoverable from ``order`` tokens of context.
+    """
+    if order < 1:
+        raise ValueError(f"order must be >= 1, got {order}")
     rng = np.random.default_rng(seed)
-    # each token depends on the previous one through a random permutation
-    # + noise, so next-token prediction is learnable above chance.
     perm = rng.permutation(vocab)
     toks = rng.integers(0, vocab, size=(num_samples, seq_len)).astype(np.int32)
     for t in range(1, seq_len):
         follow = rng.random(size=num_samples) < 0.8
-        toks[follow, t] = perm[toks[follow, t - 1]]
+        ctx = toks[follow, t - 1]
+        if order > 1:
+            ctx = (ctx + toks[follow, t - min(order, t)]) % vocab
+        toks[follow, t] = perm[ctx]
     x = toks[:, :-1]
     y = toks[:, 1:]
     return x, y

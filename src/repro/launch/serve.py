@@ -7,7 +7,7 @@ greedily, reporting tokens/s.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
-      --batch 4 --prompt-len 64 --gen 32 [--reduced]
+      --batch 4 --prompt-len 64 --gen 32 [--size {reduced,full}]
 """
 from __future__ import annotations
 
@@ -32,19 +32,36 @@ def make_serving_fns(cfg, window: int = 0):
     return prefill, jax.jit(decode, donate_argnums=(3,))
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--num-batches", type=int, default=3)
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--full", dest="reduced", action="store_false")
-    args = ap.parse_args()
+    add_size_args(ap)
+    return ap
+
+
+def add_size_args(ap: argparse.ArgumentParser):
+    """--size {reduced,full} (default reduced) + --reduced/--full aliases.
+
+    The old spelling (`--reduced` as store_true with default=True) made the
+    documented flag a no-op; the explicit pair keeps both spellings working.
+    """
+    ap.add_argument("--size", choices=("reduced", "full"), default="reduced")
+    ap.add_argument("--reduced", dest="size", action="store_const",
+                    const="reduced", help="alias for --size reduced")
+    ap.add_argument("--full", dest="size", action="store_const",
+                    const="full", help="alias for --size full")
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
 
     cfg = get_config(args.arch)
-    if args.reduced:
+    if args.size == "reduced":
         cfg = cfg.reduced()
     if cfg.encoder_only:
         raise SystemExit(f"{cfg.name} is encoder-only: no decode step "

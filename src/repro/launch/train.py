@@ -10,7 +10,7 @@ Two modes:
 
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
-      --rounds 50 --clients 4 --h 5 [--reduced] [--method cse_fsl]
+      --rounds 50 --clients 4 --h 5 [--size {reduced,full}] [--method cse_fsl]
 """
 from __future__ import annotations
 
@@ -33,6 +33,7 @@ from repro.common import bytes_of, count_params
 from repro.data import FederatedBatcher, partition_dirichlet, partition_iid, \
     synthetic_lm
 from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.serve import add_size_args
 
 
 def build_data(cfg, fsl: FSLConfig, seq_len: int, samples_per_client: int,
@@ -82,8 +83,7 @@ def main():
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--method", default="cse_fsl",
                     choices=list(available_methods()))
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--full", dest="reduced", action="store_false")
+    add_size_args(ap)
     ap.add_argument("--non-iid", action="store_true")
     ap.add_argument("--server-update", default="sequential")
     ap.add_argument("--log-every", type=int, default=10)
@@ -91,7 +91,7 @@ def main():
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
-    if args.reduced:
+    if args.size == "reduced":
         cfg = cfg.reduced()
     fsl = FSLConfig(num_clients=args.clients, h=args.h, lr=args.lr,
                     method=args.method, server_update=args.server_update)

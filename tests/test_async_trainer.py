@@ -1,0 +1,236 @@
+"""The event-driven execution engine: latency models, arrival-order server
+consumption, sync-schedule equivalence at zero latency, determinism, and
+facade parity with the synchronous Trainer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FSLConfig
+from repro.core.async_trainer import (AsyncTrainer, ConstantLatency,
+                                      LatencyTrace, LognormalLatency,
+                                      StragglerLatency, make_latency)
+from repro.core.bundle import cnn_bundle
+from repro.core.methods import get_method
+from repro.core.trainer import Trainer
+from repro.data import FederatedBatcher, partition_iid, \
+    synthetic_classification
+from repro.models.cnn import CIFAR10
+
+ALL_METHODS = ("cse_fsl", "fsl_mc", "fsl_oc", "fsl_an")
+
+
+def _setup(n=2, samples=240, seed=0):
+    bundle = cnn_bundle(CIFAR10)
+    x, y = synthetic_classification(samples, CIFAR10.in_shape, 10, seed=seed,
+                                    signal=12.0)
+    return bundle, partition_iid(x, y, n, seed=seed)
+
+
+def _leaves_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# Latency models
+# ---------------------------------------------------------------------------
+
+
+def test_latency_models_shapes_and_determinism():
+    for name, kw in (("constant", {}), ("lognormal", {}),
+                     ("straggler", {"frac": 0.5})):
+        model = make_latency(name, **kw)
+        t1 = model.draw(np.random.default_rng(3), 4, 5, 2)
+        t2 = model.draw(np.random.default_rng(3), 4, 5, 2)
+        assert t1.shape == (4, 5, 2)
+        for f in ("compute", "up", "down"):
+            arr1, arr2 = getattr(t1, f), getattr(t2, f)
+            assert arr1.shape == (4, 5, 2)
+            assert (arr1 > 0).all()
+            np.testing.assert_array_equal(arr1, arr2)   # seeded => same trace
+    with pytest.raises(KeyError, match="unknown latency model"):
+        make_latency("uniform")
+
+
+def test_straggler_latency_slows_a_fraction():
+    base = ConstantLatency(compute=1.0, up=0.0, down=0.0)
+    tr = StragglerLatency(base=base, frac=0.25, slowdown=8.0).draw(
+        np.random.default_rng(0), 3, 8, 1)
+    per_client = tr.compute[0, :, 0]
+    assert (per_client == 8.0).sum() == 2        # 25% of 8 clients
+    assert (per_client == 1.0).sum() == 6
+    np.testing.assert_array_equal(tr.up, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_async_all_methods_smoke(method):
+    """Every registered method runs event-driven through the same engine:
+    finite losses, clients FedAvg-synced after the final aggregation,
+    merged params expose the deployable model."""
+    n, h = 2, 2
+    bundle, fed = _setup(n=n)
+    fsl = FSLConfig(num_clients=n, h=h, lr=0.05, method=method,
+                    grad_clip=1.0 if method == "fsl_oc" else 0.0)
+    trainer = AsyncTrainer(bundle, fsl, latency=LognormalLatency(), seed=1)
+    state = trainer.init(0)
+    state, history = trainer.run(state, FederatedBatcher(fed, 8, h, seed=0),
+                                 2, log_every=1)
+    assert len(history) == 2
+    for row in history:
+        for k, v in row.items():
+            if k != "round":
+                assert np.isfinite(v), (method, row)
+    for leaf in jax.tree_util.tree_leaves(state["clients"]["params"]):
+        arr = np.asarray(leaf, np.float32)
+        np.testing.assert_allclose(arr[0], arr[1], rtol=1e-6, atol=1e-6)
+    merged = trainer.merged_params(state)
+    assert {"client", "server"} <= set(merged)
+    if get_method(method).has_aux:
+        assert "aux" in merged
+    s = trainer.stats
+    assert s.events == n * (h if get_method(method).uploads_every_batch
+                            else 1) * 2
+    assert s.sync_time >= s.async_time > 0
+
+
+@pytest.mark.parametrize("h,agg_every", [(3, 2), (2, 5)])
+def test_zero_latency_async_matches_sync_schedule(h, agg_every):
+    """The acceptance check: with zero-latency clients the event engine
+    realizes the *identical* aggregation schedule as the sync Trainer for
+    agg_every % h != 0 configs — and (CSE-FSL) the same numerics."""
+    n, rounds = 2, 5
+    bundle, fed = _setup(n=n)
+    fsl = FSLConfig(num_clients=n, h=h, agg_every=agg_every, lr=0.05)
+
+    sync = Trainer(bundle, fsl, donate=False)
+    s_sync, hist_sync = sync.run(sync.init(0),
+                                 FederatedBatcher(fed, 8, h, seed=0),
+                                 rounds, log_every=1)
+
+    asyn = AsyncTrainer(bundle, fsl, latency=ConstantLatency(0.0, 0.0, 0.0))
+    s_async, hist_async = asyn.run(asyn.init(0),
+                                   FederatedBatcher(fed, 8, h, seed=0),
+                                   rounds, log_every=1)
+
+    sched_sync = [r["aggregated"] for r in hist_sync]
+    sched_async = [r["aggregated"] for r in hist_async]
+    assert sched_sync == sched_async
+    expected = [(r * h) // agg_every > ((r - 1) * h) // agg_every
+                for r in range(1, rounds + 1)]
+    assert sched_sync == expected
+    # zero latency degenerates to the synchronous arrival order, so the
+    # trained states agree too (vmap vs per-slice execution, hence fp-tol)
+    for a, b in zip(jax.tree_util.tree_leaves(s_sync),
+                    jax.tree_util.tree_leaves(s_async)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_async_deterministic_same_seed_same_trace():
+    """Same init seed + same latency trace => bitwise-identical final
+    params across two independent runs."""
+    n, h = 3, 2
+    bundle, fed = _setup(n=n, samples=360)
+    fsl = FSLConfig(num_clients=n, h=h, lr=0.05)
+
+    def one_run():
+        t = AsyncTrainer(bundle, fsl, latency=LognormalLatency(), seed=11)
+        return t.run(t.init(0), FederatedBatcher(fed, 8, h, seed=0), 3)[0]
+
+    assert _leaves_equal(one_run(), one_run())
+
+
+def test_async_explicit_trace_replay():
+    """Passing the same LatencyTrace replays identical wall-clock
+    conditions regardless of the trainer's own latency model/seed."""
+    n, h, rounds = 2, 2, 2
+    bundle, fed = _setup(n=n)
+    fsl = FSLConfig(num_clients=n, h=h, lr=0.05)
+    trace = LognormalLatency().draw(np.random.default_rng(5), rounds, n, 1)
+
+    def one_run(seed):
+        t = AsyncTrainer(bundle, fsl, latency=ConstantLatency(), seed=seed)
+        s, _ = t.run(t.init(0), FederatedBatcher(fed, 8, h, seed=0), rounds,
+                     trace=trace)
+        return s, t.stats
+
+    s1, st1 = one_run(1)
+    s2, st2 = one_run(2)
+    assert _leaves_equal(s1, s2)
+    assert st1.async_time == st2.async_time
+    assert st1.arrival_order == st2.arrival_order
+    with pytest.raises(ValueError, match="latency trace shape"):
+        one_run_trainer = AsyncTrainer(bundle, fsl)
+        one_run_trainer.run(one_run_trainer.init(0),
+                            FederatedBatcher(fed, 8, h, seed=0), rounds + 1,
+                            trace=trace)
+
+
+def test_latency_seed_permutes_arrival_order():
+    """Different latency seeds produce different first-round consumption
+    orders (the Fig. 6 permutations are real, not cosmetic)."""
+    n, h = 4, 2
+    bundle, fed = _setup(n=n, samples=320)
+    fsl = FSLConfig(num_clients=n, h=h, lr=0.05)
+    orders = set()
+    for seed in (1, 2, 3):
+        t = AsyncTrainer(bundle, fsl,
+                         latency=LognormalLatency(sigma=1.0, spread=1.0),
+                         seed=seed)
+        t.run(t.init(0), FederatedBatcher(fed, 8, h, seed=0), 1)
+        assert sorted(t.stats.arrival_order) == list(range(n))
+        orders.add(tuple(t.stats.arrival_order))
+    assert len(orders) > 1, orders
+
+
+def test_async_comm_meter_matches_sync():
+    """The CommProfile-driven metering is integrated identically in both
+    trainers: same config + same rounds => same measured bytes."""
+    from repro.common import bytes_of
+    from repro.core.accounting import CommMeter, CostModel
+
+    n, h, rounds = 2, 2, 3
+    bundle, fed = _setup(n=n)
+    fsl = FSLConfig(num_clients=n, h=h, lr=0.05)
+    pa = jax.eval_shape(bundle.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    cm = CostModel(n=n, q=bundle.smashed_bytes_per_sample, d_local=120,
+                   w_client=bytes_of(pa["client"]),
+                   w_server=bytes_of(pa["server"]), aux=bytes_of(pa["aux"]))
+
+    sync, m_sync = Trainer(bundle, fsl, donate=False), CommMeter()
+    sync.run(sync.init(0), FederatedBatcher(fed, 8, h, seed=0), rounds,
+             meter=m_sync, cost_model=cm)
+    asyn, m_async = AsyncTrainer(bundle, fsl), CommMeter()
+    asyn.run(asyn.init(0), FederatedBatcher(fed, 8, h, seed=0), rounds,
+             meter=m_async, cost_model=cm)
+    assert m_sync.as_dict() == m_async.as_dict()
+    assert m_async.total > 0
+
+
+def test_async_resume_keeps_cadence():
+    """A split run (3 + 2 rounds) realizes the same aggregation schedule
+    as one continuous 5-round run — the cadence is carried in the state."""
+    n, h, C = 2, 2, 5
+    bundle, fed = _setup(n=n)
+    fsl = FSLConfig(num_clients=n, h=h, agg_every=C, lr=0.05)
+    t = AsyncTrainer(bundle, fsl, latency=ConstantLatency(0.0, 0.0, 0.0))
+
+    batcher = FederatedBatcher(fed, 8, h, seed=0)
+    state = t.init(0)
+    state, h1 = t.run(state, batcher, 3, log_every=1)
+    state, h2 = t.run(state, batcher, 2, log_every=1)
+    split_sched = [r["aggregated"] for r in h1 + h2]
+
+    t2 = AsyncTrainer(bundle, fsl, latency=ConstantLatency(0.0, 0.0, 0.0))
+    _, h3 = t2.run(t2.init(0), FederatedBatcher(fed, 8, h, seed=0), 5,
+                   log_every=1)
+    assert split_sched == [r["aggregated"] for r in h3]
+    assert [r["round"] for r in h1 + h2] == [1, 2, 3, 4, 5]

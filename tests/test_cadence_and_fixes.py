@@ -1,0 +1,104 @@
+"""Regression tests for the aggregation-cadence bug in Trainer.run, the
+resume-resets-the-schedule bug, and the serve launcher's --size argparse."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import FSLConfig
+from repro.core.bundle import cnn_bundle
+from repro.core.trainer import AggregationCadence, Trainer
+from repro.data import FederatedBatcher, partition_iid, \
+    synthetic_classification
+from repro.models.cnn import CIFAR10
+
+
+def _setup(n=2, samples=240, seed=0):
+    bundle = cnn_bundle(CIFAR10)
+    x, y = synthetic_classification(samples, CIFAR10.in_shape, 10, seed=seed,
+                                    signal=12.0)
+    return bundle, partition_iid(x, y, n, seed=seed)
+
+
+def _expected_schedule(h, C, rounds):
+    return [(r * h) // C > ((r - 1) * h) // C for r in range(1, rounds + 1)]
+
+
+def test_aggregation_cadence_threshold_crossing():
+    cad = AggregationCadence(5)
+    fired = [cad.advance(2) for _ in range(5)]     # batches 2,4,6,8,10
+    assert fired == [False, False, True, False, True]
+    assert cad.batches_done == 10
+    # resumed mid-schedule: picks up where the counter left off
+    cad2 = AggregationCadence(5, batches_done=4)
+    assert cad2.advance(2) is True                 # 4 -> 6 crosses 5
+
+
+@pytest.mark.parametrize("h,C", [(2, 3), (3, 2), (2, 5)])
+def test_trainer_aggregates_on_threshold_crossing(h, C):
+    """The old `batches_done % C == 0` check fired late or never when
+    C % h != 0 (e.g. h=3, C=2 aggregated every other round); threshold
+    crossing fires exactly when a multiple of C is passed."""
+    n, rounds = 2, 6
+    bundle, fed = _setup(n=n)
+    fsl = FSLConfig(num_clients=n, h=h, agg_every=C, lr=0.05)
+    trainer = Trainer(bundle, fsl, donate=False)
+    state, history = trainer.run(trainer.init(0),
+                                 FederatedBatcher(fed, 8, h, seed=0),
+                                 rounds, log_every=1)
+    assert [r["aggregated"] for r in history] == \
+        _expected_schedule(h, C, rounds)
+    # h=3, C=2 must aggregate every round (the reported repro case)
+    if (h, C) == (3, 2):
+        assert all(r["aggregated"] for r in history)
+
+
+def test_trainer_resume_keeps_cadence_and_lr_schedule():
+    """Resumed Trainer.run must continue the C-batch schedule and the lr
+    decay from state["round"] instead of recounting — split (2 + 1 rounds)
+    and continuous (3 rounds) runs agree bitwise."""
+    n, h, C = 2, 3, 2
+    bundle, fed = _setup(n=n)
+    fsl = FSLConfig(num_clients=n, h=h, agg_every=C, lr=0.1,
+                    lr_decay_every=1, lr_decay=0.9)
+
+    trainer = Trainer(bundle, fsl, donate=False)
+    batcher = FederatedBatcher(fed, 8, h, seed=0)
+    state = trainer.init(0)
+    state, h1 = trainer.run(state, batcher, 2, log_every=1)
+    state, h2 = trainer.run(state, batcher, 1, log_every=1)
+    assert [r["round"] for r in h1 + h2] == [1, 2, 3]
+
+    cont = Trainer(bundle, fsl, donate=False)
+    state_c, _ = cont.run(cont.init(0), FederatedBatcher(fed, 8, h, seed=0),
+                          3, log_every=1)
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(state_c)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_trainer_resume_cadence_across_call_boundary():
+    """With C=5, h=2 the first aggregation lands in round 3; a run split
+    1+4 must not re-arm the counter at the call boundary."""
+    n, h, C = 2, 2, 5
+    bundle, fed = _setup(n=n)
+    fsl = FSLConfig(num_clients=n, h=h, agg_every=C, lr=0.05)
+    trainer = Trainer(bundle, fsl, donate=False)
+    batcher = FederatedBatcher(fed, 8, h, seed=0)
+    state = trainer.init(0)
+    state, h1 = trainer.run(state, batcher, 1, log_every=1)
+    state, h2 = trainer.run(state, batcher, 4, log_every=1)
+    assert [r["aggregated"] for r in h1 + h2] == \
+        _expected_schedule(h, C, 5)
+
+
+def test_serve_size_argparse():
+    """--reduced was store_true with default=True: the documented flag was
+    a no-op and full-size could never be selected by --size semantics."""
+    from repro.launch.serve import build_parser
+    ap = build_parser()
+    assert ap.parse_args([]).size == "reduced"
+    assert ap.parse_args(["--size", "full"]).size == "full"
+    assert ap.parse_args(["--full"]).size == "full"
+    assert ap.parse_args(["--reduced"]).size == "reduced"
+    with pytest.raises(SystemExit):
+        ap.parse_args(["--size", "tiny"])
