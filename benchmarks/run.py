@@ -12,8 +12,9 @@ import sys
 import time
 import traceback
 
-from benchmarks import fig6_async_order, fig45_convergence, fig78_aux_arch, \
-    roofline_report, table2_comm_storage, table5_tradeoff, table34_aux_params
+from benchmarks import fig6_async_order, fig9_codec_tradeoff, \
+    fig45_convergence, fig78_aux_arch, roofline_report, \
+    table2_comm_storage, table5_tradeoff, table34_aux_params
 
 SUITES = [
     ("table2_comm_storage", table2_comm_storage.main),
@@ -21,6 +22,7 @@ SUITES = [
     ("fig45_convergence", fig45_convergence.main),
     ("fig6_async_order", fig6_async_order.main),
     ("fig78_aux_arch", fig78_aux_arch.main),
+    ("fig9_codec_tradeoff", fig9_codec_tradeoff.main),
     ("table5_tradeoff", table5_tradeoff.main),
     ("roofline_report", roofline_report.main),
 ]

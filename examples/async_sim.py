@@ -22,6 +22,7 @@ from repro.configs.base import FSLConfig
 from repro.core.async_trainer import AsyncTrainer, make_latency
 from repro.core.bundle import cnn_bundle
 from repro.core.methods import available_methods
+from repro.transport import available_codecs
 from repro.data import FederatedBatcher, partition_iid, \
     synthetic_classification
 from repro.models import cnn as cnn_mod
@@ -40,7 +41,7 @@ def run(args, latency_seed: int):
                                     signal=12.0, seed=1)
     fed = partition_iid(x, y, args.clients, seed=1)
     fsl = FSLConfig(num_clients=args.clients, h=args.h, lr=args.lr,
-                    method=args.method,
+                    method=args.method, codec=args.codec,
                     grad_clip=1.0 if args.method == "fsl_oc" else 0.0)
     trainer = AsyncTrainer(bundle, fsl, latency=make_latency(args.latency),
                            seed=latency_seed)
@@ -64,6 +65,9 @@ def main():
                     choices=list(available_methods()))
     ap.add_argument("--latency", default="lognormal",
                     choices=("constant", "lognormal", "straggler"))
+    ap.add_argument("--codec", default="none",
+                    choices=list(available_codecs()),
+                    help="uplink wire codec applied to every upload event")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

@@ -22,6 +22,7 @@ from repro.core.accounting import CommMeter, CostModel
 from repro.core.bundle import transformer_bundle
 from repro.core.trainer import Trainer
 from repro.launch.train import LMBatcher, build_data
+from repro.transport import available_codecs
 from repro.models.model import abstract_params
 
 
@@ -40,6 +41,9 @@ def main():
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=0.25)
+    ap.add_argument("--codec", default="none",
+                    choices=list(available_codecs()),
+                    help="uplink wire codec (the meter reports wire bytes)")
     ap.add_argument("--non-iid", action="store_true")
     args = ap.parse_args()
 
@@ -48,7 +52,8 @@ def main():
     print(f"model: {cfg.name}-100m  params={n_params / 1e6:.1f}M  "
           f"cut={cfg.resolved_cut}/{cfg.num_layers}")
 
-    fsl = FSLConfig(num_clients=args.clients, h=args.h, lr=args.lr)
+    fsl = FSLConfig(num_clients=args.clients, h=args.h, lr=args.lr,
+                    codec=args.codec)
     bundle = transformer_bundle(cfg)
     fed = build_data(cfg, fsl, args.seq, args.batch * args.h * 8,
                      args.non_iid)

@@ -171,7 +171,7 @@ class FSLConfig:
     agg_every: int = 0          # C, in batches; 0 -> once per round (C=h)
     method: str = "cse_fsl"     # cse_fsl | fsl_mc | fsl_oc | fsl_an
     server_update: str = "sequential"   # sequential (faithful) | batched
-    smashed_dtype: str = ""     # "" -> model dtype; "int8" = quantized upload
+    codec: str = "none"         # uplink wire codec: none|int8|fp8|topk
     grad_clip: float = 0.0      # used by FSL_OC (paper: gradient clipping)
     lr: float = 0.05
     lr_decay_every: int = 10    # rounds (paper: decay every 10 rounds)

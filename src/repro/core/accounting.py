@@ -31,54 +31,49 @@ class CostModel:
     label_bytes: int = 4
 
 
+def _profile(cm: CostModel, method: str, h: int = 1, batch_size: int = 1,
+             n: int | None = None):
+    """The method's declarative CommProfile at this cost model — the single
+    source of truth every analytic helper below derives from (no more
+    per-method byte formulas duplicated in three places)."""
+    from repro.configs.base import FSLConfig
+    from repro.core.methods import get_method
+    n = cm.n if n is None else n
+    cm = dataclasses.replace(cm, n=n)
+    fsl = FSLConfig(num_clients=n, h=h, method=method)
+    try:
+        m = get_method(method)
+    except KeyError:
+        raise ValueError(method) from None
+    return m.comm_profile(cm, fsl, batch_size)
+
+
 def comm_one_epoch(cm: CostModel, method: str, h: int = 1) -> Dict[str, int]:
-    """Bytes communicated in one global epoch (Table II columns 1-3)."""
-    smashed_up = cm.n * cm.q * cm.d_local
-    labels_up = cm.n * cm.label_bytes * cm.d_local
-    model_sync_mc = 2 * cm.n * cm.w_client
-    model_sync_an = 2 * cm.n * (cm.w_client + cm.aux)
-    if method == "fsl_mc" or method == "fsl_oc":
-        # per-batch smashed up + per-batch gradient down (same size as q|D|)
-        return {"uplink_smashed": smashed_up,
-                "uplink_labels": labels_up,
-                "downlink_grads": smashed_up,
-                "model_sync": model_sync_mc,
-                "total": 2 * smashed_up + labels_up + model_sync_mc}
-    if method == "fsl_an":
-        return {"uplink_smashed": smashed_up,
-                "uplink_labels": labels_up,
-                "downlink_grads": 0,
-                "model_sync": model_sync_an,
-                "total": smashed_up + labels_up + model_sync_an}
-    if method == "cse_fsl":
-        return {"uplink_smashed": smashed_up // h,
-                "uplink_labels": labels_up // h,
-                "downlink_grads": 0,
-                "model_sync": model_sync_an,
-                "total": smashed_up // h + labels_up // h + model_sync_an}
-    raise ValueError(method)
+    """Bytes communicated in one global epoch (Table II columns 1-3).
+
+    Derived from the per-round CommProfile at B=1: one epoch is
+    ``d_local / h`` rounds, so each traffic field scales by ``d_local / h``
+    (floor division, matching Table II's ``q|D|/h`` row for CSE-FSL).
+    """
+    p = _profile(cm, method, h=h, batch_size=1)
+    out = {k: (v * cm.d_local) // h
+           for k, v in (("uplink_smashed", p.uplink_smashed),
+                        ("uplink_labels", p.uplink_labels),
+                        ("downlink_grads", p.downlink_grads))}
+    out["model_sync"] = p.model_sync
+    out["total"] = sum(out.values())
+    return out
 
 
 def server_storage(cm: CostModel, method: str) -> int:
     """Server-side persistent model storage (Table II last column)."""
-    if method == "fsl_mc":
-        return cm.n * cm.w_server
-    if method == "fsl_oc":
-        return cm.w_server
-    if method == "fsl_an":
-        return cm.n * (cm.w_server + cm.aux)
-    if method == "cse_fsl":
-        return cm.w_server + cm.aux
-    raise ValueError(method)
+    return _profile(cm, method).server_storage
 
 
 def total_storage(cm: CostModel, method: str) -> int:
     """§VI-E: aggregation-time storage = server models + n client models
     (+ aux nets where applicable)."""
-    agg = cm.n * cm.w_client
-    if method in ("fsl_an", "cse_fsl"):
-        agg += cm.n * cm.aux
-    return agg + server_storage(cm, method)
+    return _profile(cm, method).total_storage
 
 
 # ---------------------------------------------------------------------------
@@ -107,24 +102,17 @@ class CommMeter:
 
 def meter_round(meter: CommMeter, cm: CostModel, method: str, h: int,
                 batch_size: int, smashed_bytes_per_sample: int | None = None):
-    """Account one CSE-FSL/baseline round (h batches) of traffic."""
+    """Account ONE client's round (h batches) of traffic — the per-client
+    slice (n=1) of the method's CommProfile."""
     q = smashed_bytes_per_sample or cm.q
-    if method in ("fsl_mc", "fsl_oc"):
-        for _ in range(h):      # these methods upload every batch
-            meter.log("uplink_smashed", q * batch_size)
-            meter.log("uplink_labels", cm.label_bytes * batch_size)
-            meter.log("downlink_grads", q * batch_size)
-        return
-    if method == "fsl_an":
-        for _ in range(h):
-            meter.log("uplink_smashed", q * batch_size)
-            meter.log("uplink_labels", cm.label_bytes * batch_size)
-        return
-    # cse_fsl: once per h batches
-    meter.log("uplink_smashed", q * batch_size)
-    meter.log("uplink_labels", cm.label_bytes * batch_size)
+    p = _profile(dataclasses.replace(cm, q=q), method, h=h,
+                 batch_size=batch_size, n=1)
+    meter.log("uplink_smashed", p.uplink_smashed)
+    meter.log("uplink_labels", p.uplink_labels)
+    if p.downlink_grads:
+        meter.log("downlink_grads", p.downlink_grads)
 
 
 def meter_aggregation(meter: CommMeter, cm: CostModel, method: str):
-    per_client = cm.w_client + (cm.aux if method in ("fsl_an", "cse_fsl") else 0)
-    meter.log("model_sync", 2 * cm.n * per_client)
+    """Account one aggregation event (all n clients' model sync)."""
+    meter.log("model_sync", _profile(cm, method).model_sync)

@@ -189,14 +189,16 @@ class AsyncStats:
 # ---------------------------------------------------------------------------
 
 
-def _unit_batch(batch, c: int, k: int, bpu: int):
+def _unit_batch(batch, c: int, k: int, hooks):
     """Upload unit k of client c from a [n, h, B, ...] round batch:
-    ``[h, B, ...]`` when bpu == h (one upload per round), ``[B, ...]``
-    when bpu == 1 (per-batch uploads)."""
-    if bpu == 1:
-        return jax.tree_util.tree_map(lambda x: x[c, k], batch)
-    return jax.tree_util.tree_map(lambda x: x[c, k * bpu:(k + 1) * bpu],
-                                  batch)
+    ``[bpu, B, ...]`` for hooks whose unit keeps the h axis (CSE-style
+    local phases — also at h == 1, where ``bpu`` alone is ambiguous),
+    ``[B, ...]`` for per-mini-batch hooks."""
+    bpu = hooks.batches_per_upload
+    if hooks.unit_has_h_axis:
+        return jax.tree_util.tree_map(
+            lambda x: x[c, k * bpu:(k + 1) * bpu], batch)
+    return jax.tree_util.tree_map(lambda x: x[c, k], batch)
 
 
 @dataclasses.dataclass
@@ -219,17 +221,28 @@ class AsyncTrainer:
     latency: LatencyModel = dataclasses.field(default_factory=ConstantLatency)
     server_time: float = 0.05
     seed: int = 0
+    # wire codecs (None resolves fsl.codec): every upload event is coded
+    # per client before it enters the arrival queue, replies before the
+    # client receives them — the same boundary the sync assembly codes.
+    transport: Optional[Any] = None
 
     def __post_init__(self):
+        from repro.transport import resolve_transport
         m = self.method if self.method is not None else self.fsl.method
         if isinstance(m, str):
             m = get_method(m)
         self.method = m
+        self.transport = resolve_transport(self.transport, self.fsl)
         self.hooks = m.make_async_hooks(self.bundle, self.fsl)
         self._compute_fn = jax.jit(self.hooks.client_compute)
         self._consume_fn = jax.jit(self.hooks.server_consume)
         self._receive_fn = (jax.jit(self.hooks.client_receive)
                             if self.hooks.client_receive is not None else None)
+        self._code_up = jax.jit(self.transport.code_uplink) \
+            if not self.transport.uplink.is_identity else None
+        self._code_down = jax.jit(self.transport.code_downlink) \
+            if (self._receive_fn is not None
+                and not self.transport.downlink.is_identity) else None
         self._agg_fn = jax.jit(m.make_aggregate())
         self._stacked_keys = ("clients",) if self.hooks.server_shared \
             else ("clients", self.hooks.server_key)
@@ -248,9 +261,16 @@ class AsyncTrainer:
         """Deployable {"client", ["aux",] "server"} params for evaluation."""
         return self.method.merged_params(state)
 
-    def comm_profile(self, cost_model: CostModel,
-                     batch_size: int) -> CommProfile:
-        return self.method.comm_profile(cost_model, self.fsl, batch_size)
+    def comm_profile(self, cost_model: CostModel, batch_size: int,
+                     batch=None) -> CommProfile:
+        """With a ``batch``, the profile's ``*_wire`` fields are exact for
+        this trainer's transport (payload specs recovered via eval_shape)."""
+        specs = None
+        if batch is not None and not self.transport.is_identity:
+            specs = self.method.payload_specs(self.bundle, self.fsl, batch)
+        return self.method.comm_profile(cost_model, self.fsl, batch_size,
+                                        transport=self.transport,
+                                        payload_specs=specs)
 
     # -- state <-> per-client slices ----------------------------------------
     def _split(self, state):
@@ -304,17 +324,18 @@ class AsyncTrainer:
             batch = batcher.next_round()
             if meter is not None and cost_model is not None and profile is None:
                 batch_size = jax.tree_util.tree_leaves(batch[1])[0].shape[2]
-                profile = self.comm_profile(cost_model, batch_size)
+                profile = self.comm_profile(cost_model, batch_size,
+                                            batch=batch)
             lr = self.lr_at(rnd0 + r)
             shared, metrics = self._run_round(
                 slices, shared, batch, lr, trace.compute[r], trace.up[r],
-                trace.down[r])
+                trace.down[r], unit0=round_val)
             self.stats.rounds += 1
             round_val += K
             if profile is not None:
-                meter.log("uplink_smashed", profile.uplink_smashed)
+                meter.log("uplink_smashed", profile.wire_uplink_smashed)
                 meter.log("uplink_labels", profile.uplink_labels)
-                meter.log("downlink_grads", profile.downlink_grads)
+                meter.log("downlink_grads", profile.wire_downlink_grads)
             aggregated = cadence.advance(fsl.h)
             if aggregated:
                 state = self._join(state, slices, shared, round_val)
@@ -336,15 +357,20 @@ class AsyncTrainer:
 
     def _run_round(self, slices: List[Dict[str, Any]], shared, batch,
                    lr: float, comp: np.ndarray, up: np.ndarray,
-                   down: np.ndarray):
+                   down: np.ndarray, unit0: int = 0):
         """One global round of the event simulation: client transactions
         feed a priority queue of upload arrivals; the server services them
         in arrival order (FIFO on ties, so zero latency reproduces the
-        synchronous order).  Returns (shared', mean metrics)."""
+        synchronous order).  ``unit0`` is the absolute upload-unit counter
+        at round entry (= ``state["round"]``), salting the stochastic
+        codec keys the same way the sync assembly does.  Returns
+        (shared', mean metrics)."""
         hooks, st = self.hooks, self.stats
-        n, K, bpu = len(slices), hooks.uploads_per_round, \
-            hooks.batches_per_upload
+        n, K = len(slices), hooks.uploads_per_round
         blocking = self._receive_fn is not None
+
+        def _codec_key(k: int, c: int, salt: int):
+            return self.transport.unit_key(unit0 + k, client=c, salt=salt)
         heap: list = []
         seq = itertools.count()
         next_k = [0] * n
@@ -358,10 +384,12 @@ class AsyncTrainer:
                 metric_cnt[key] = metric_cnt.get(key, 0) + 1
 
         def launch(c: int):
-            """Client c computes its next upload unit and ships it."""
+            """Client c computes its next upload unit and ships it coded."""
             k = next_k[c]
             cslice, upload, pending, m = self._compute_fn(
-                slices[c], _unit_batch(batch, c, k, bpu), lr)
+                slices[c], _unit_batch(batch, c, k, hooks), lr)
+            if self._code_up is not None:
+                upload = self._code_up(upload, _codec_key(k, c, 0))
             slices[c] = cslice
             tally(m)
             client_t[c] += float(comp[c, k])
@@ -399,6 +427,8 @@ class AsyncTrainer:
             t_end = max(t_end, t_done)
             if blocking:
                 t_reply = t_done + float(down[c, k])
+                if self._code_down is not None:
+                    reply = self._code_down(reply, _codec_key(k, c, 1))
                 slices[c] = self._receive_fn(slices[c], pending, reply, lr)
                 st.client_wait += t_reply - client_t[c]
                 client_t[c] = t_reply

@@ -1,27 +1,5 @@
-"""Compatibility shim — the baseline methods moved to
-``repro.core.methods.{fsl_mc,fsl_oc,fsl_an}`` behind the `FSLMethod` API.
-Import ``repro.core.methods.get_method(name)`` in new code.
-
-NOTE: the per-batch step builders exposed here (``STEPS``) consume one
-mini-batch ``[n, B, ...]``; the registered methods' ``make_round_step``
-consume the unified ``[n, h, B, ...]`` round contract instead.
-"""
-from repro.core.methods import get_method
-from repro.core.methods.fsl_an import make_batch_step as make_fsl_an_step
-from repro.core.methods.fsl_mc import make_batch_step as make_fsl_mc_step
-from repro.core.methods.fsl_oc import make_batch_step as make_fsl_oc_step
-
-
-def init_state(bundle, fsl, key, method: str):
-    return get_method(method).init_state(bundle, fsl, key)
-
-
-def make_aggregate(method: str):
-    return get_method(method).make_aggregate()
-
-
-STEPS = {"fsl_mc": make_fsl_mc_step, "fsl_oc": make_fsl_oc_step,
-         "fsl_an": make_fsl_an_step}
-
-__all__ = ["init_state", "make_aggregate", "STEPS", "make_fsl_mc_step",
-           "make_fsl_oc_step", "make_fsl_an_step"]
+"""Retired (PR 3): the baseline methods live in
+``repro.core.methods.{fsl_mc,fsl_oc,fsl_an}`` behind the `FSLMethod` API."""
+raise ImportError(
+    "repro.core.baselines was retired — use "
+    "repro.core.methods.get_method('fsl_mc'|'fsl_oc'|'fsl_an')")

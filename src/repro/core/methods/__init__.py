@@ -5,8 +5,10 @@ name with :func:`get_method` and drive any of them through the shared
 :class:`repro.core.trainer.Trainer`.  See README "The FSLMethod interface".
 """
 from repro.core.methods.base import (AsyncHooks, CommProfile, FSLMethod,
-                                     available_methods, get_method, register)
+                                     assemble_round_step, available_methods,
+                                     get_method, register)
 from repro.core.methods import cse_fsl, fsl_an, fsl_mc, fsl_oc  # noqa: F401
 
-__all__ = ["AsyncHooks", "CommProfile", "FSLMethod", "available_methods",
-           "get_method", "register", "cse_fsl", "fsl_mc", "fsl_oc", "fsl_an"]
+__all__ = ["AsyncHooks", "CommProfile", "FSLMethod", "assemble_round_step",
+           "available_methods", "get_method", "register", "cse_fsl",
+           "fsl_mc", "fsl_oc", "fsl_an"]

@@ -47,17 +47,41 @@ class CommProfile:
     round (= ``h`` mini-batches per client); ``model_sync`` is the total for
     one aggregation event (up + down for every client).  Storage fields are
     static byte counts (Table II last column and §VI-E).
+
+    The ``*_wire`` fields are the codec-aware *effective* bytes: what the
+    transport layer actually puts on the link (compressed payload + side
+    channels like per-tile scales, exact per ``Codec.wire_bytes``).  They
+    default to the raw analytic values, so an identity transport meters
+    exactly what it always did; ``CommMeter`` is driven from the wire
+    values so compressed runs report compressed bytes, not fp32 fiction.
     """
-    uplink_smashed: int         # per round
+    uplink_smashed: int         # per round, at the model dtype (analytic)
     uplink_labels: int          # per round
-    downlink_grads: int         # per round
+    downlink_grads: int         # per round, at the model dtype (analytic)
     model_sync: int             # per aggregation event
     server_storage: int         # persistent server-side model bytes
     total_storage: int          # aggregation-time storage (server + clients)
+    uplink_smashed_wire: int = -1   # codec-effective; -1 -> uplink_smashed
+    downlink_grads_wire: int = -1   # codec-effective; -1 -> downlink_grads
+
+    @property
+    def wire_uplink_smashed(self) -> int:
+        w = self.uplink_smashed_wire
+        return w if w >= 0 else self.uplink_smashed
+
+    @property
+    def wire_downlink_grads(self) -> int:
+        w = self.downlink_grads_wire
+        return w if w >= 0 else self.downlink_grads
 
     @property
     def per_round_total(self) -> int:
         return self.uplink_smashed + self.uplink_labels + self.downlink_grads
+
+    @property
+    def per_round_wire_total(self) -> int:
+        return (self.wire_uplink_smashed + self.uplink_labels
+                + self.wire_downlink_grads)
 
 
 # ---------------------------------------------------------------------------
@@ -96,6 +120,120 @@ class AsyncHooks:
     batches_per_upload: int = 1
     server_key: str = "server"
     server_shared: bool = True
+    # The shape contract of client_compute's ``cbatch``: True — a stacked
+    # [batches_per_upload, B, ...] local phase (CSE-style h-step rounds,
+    # kept even when h == 1); False — a single [B, ...] mini-batch.
+    # ``batches_per_upload`` alone cannot distinguish the two at h == 1.
+    unit_has_h_axis: bool = False
+
+
+# ---------------------------------------------------------------------------
+# One decomposition, two engines: the sync round step assembled from hooks
+# ---------------------------------------------------------------------------
+
+
+def _stacked_keys(hooks: AsyncHooks) -> tuple:
+    return ("clients",) if hooks.server_shared \
+        else ("clients", hooks.server_key)
+
+
+def assemble_round_step(hooks: AsyncHooks, fsl: FSLConfig,
+                        server_constraint: Optional[Callable] = None,
+                        transport=None):
+    """Build the synchronous ``round_step`` from a method's AsyncHooks.
+
+    This is the tentpole of the wire-level refactor: the *same*
+    client_compute / server_consume / client_receive decomposition the
+    event engine runs drives the SPMD path, so the client->server wire is
+    an explicit boundary in both.  Per upload unit:
+
+      1. ``vmap(client_compute)`` over the stacked client axis;
+      2. the transport codes each client's upload (uplink codec on float
+         leaves — labels pass through);
+      3. the server consumes: a ``lax.scan`` in client-index order when
+         the server is shared (the zero-latency arrival order, Eq. 11-13;
+         ``server_constraint`` rebalances each consumed batch, see
+         EXPERIMENTS.md §Perf), or a ``vmap`` over per-client replicas;
+      4. blocking methods code the gradient reply (downlink codec) and
+         run ``vmap(client_receive)``.
+
+    ``uploads_per_round`` units are driven by an outer ``lax.scan`` over
+    the ``h`` axis.  With the identity transport no codec ops are inserted
+    at all, so the assembled step is bitwise-identical to the pre-refactor
+    fused per-method steps (asserted in tests/test_methods.py).
+    """
+    from repro.transport import resolve_transport
+    tp = resolve_transport(transport, fsl)
+    K, bpu = hooks.uploads_per_round, hooks.batches_per_upload
+    if K * bpu != fsl.h:
+        raise ValueError(f"hooks decompose {K}x{bpu} batches per round, "
+                         f"but fsl.h={fsl.h}")
+    if hooks.unit_has_h_axis:
+        if K != 1:
+            raise ValueError("unit_has_h_axis hooks must use a single "
+                             "upload unit per round")
+    elif bpu != 1:
+        raise ValueError("unsupported decomposition: per-mini-batch hooks "
+                         "require batches_per_upload == 1")
+    blocking = hooks.client_receive is not None
+    skey, shared = hooks.server_key, hooks.server_shared
+    stacked = _stacked_keys(hooks)
+    unroll = fsl.unroll or 1
+    n = fsl.num_clients
+    code_up = not tp.uplink.is_identity
+    code_down = blocking and not tp.downlink.is_identity
+
+    def _client_keys(state, salt: int):
+        """One key per client, unique per (seed, unit counter, direction)."""
+        base = tp.unit_key(state["round"], salt=salt)
+        return jax.vmap(jax.random.fold_in, (None, 0))(base, jnp.arange(n))
+
+    def unit_step(state, ubatch, lr):
+        cstack = {k: state[k] for k in stacked}
+        cstack, uploads, pendings, cmetrics = jax.vmap(
+            lambda cs, b: hooks.client_compute(cs, b, lr))(cstack, ubatch)
+        if code_up:
+            uploads = jax.vmap(tp.code_uplink)(uploads,
+                                               _client_keys(state, 0))
+        if shared:
+            def consume(sstate, up):
+                if server_constraint is not None:
+                    up = jax.tree_util.tree_map(server_constraint, up)
+                sstate, reply, m = hooks.server_consume(sstate, up, lr)
+                return sstate, (reply, m)
+
+            sstate, (replies, smetrics) = lax.scan(
+                consume, state[skey], uploads, unroll=unroll)
+        else:
+            sstates, replies, smetrics = jax.vmap(
+                lambda s, up: hooks.server_consume(s, up, lr))(
+                    cstack[skey], uploads)
+            cstack = {**cstack, skey: sstates}
+        if blocking:
+            if code_down:
+                replies = jax.vmap(tp.code_downlink)(replies,
+                                                     _client_keys(state, 1))
+            cstack = jax.vmap(
+                lambda cs, p, r: hooks.client_receive(cs, p, r, lr))(
+                    cstack, pendings, replies)
+        new_state = {**state, **cstack, "round": state["round"] + 1}
+        if shared:
+            new_state[skey] = sstate
+        metrics = jax.tree_util.tree_map(jnp.mean, {**cmetrics, **smetrics})
+        return new_state, metrics
+
+    def round_step(state, batch, lr):
+        if hooks.unit_has_h_axis:
+            # one unit covering the whole [n, h, B, ...] round (CSE-style)
+            return unit_step(state, batch, lr)
+        # per-mini-batch hooks: scan the h axis, one unit per mini-batch
+        per_k = jax.tree_util.tree_map(lambda x: jnp.moveaxis(x, 1, 0),
+                                       batch)
+        state, metrics = lax.scan(lambda s, b: unit_step(s, b, lr),
+                                  state, per_k)
+        return state, jax.tree_util.tree_map(jnp.mean, metrics)
+
+    return round_step
 
 
 # ---------------------------------------------------------------------------
@@ -120,10 +258,19 @@ class FSLMethod:
         raise NotImplementedError
 
     def make_round_step(self, bundle: SplitModelBundle, fsl: FSLConfig,
-                        server_constraint: Optional[Callable] = None):
+                        server_constraint: Optional[Callable] = None,
+                        transport=None):
         """Returns ``round_step(state, batch, lr) -> (state, metrics)`` over
-        the unified ``[n, h, B, ...]`` batch contract."""
-        raise NotImplementedError
+        the unified ``[n, h, B, ...]`` batch contract.
+
+        The default assembles the step from :meth:`make_async_hooks` via
+        :func:`assemble_round_step` — one decomposition, two engines.  A
+        method only overrides this for sync-only execution modes the hook
+        decomposition cannot express (e.g. CSE-FSL's fused batched server
+        update)."""
+        return assemble_round_step(self.make_async_hooks(bundle, fsl), fsl,
+                                   server_constraint=server_constraint,
+                                   transport=transport)
 
     def make_aggregate(self):
         raise NotImplementedError
@@ -143,15 +290,44 @@ class FSLMethod:
     def batches_trained(self, fsl: FSLConfig, state) -> int:
         """Local mini-batches each client has trained so far, recovered
         from ``state["round"]``.  Per-batch methods advance the counter
-        once per inner mini-batch (``scan_over_h``), CSE-FSL once per
+        once per inner upload unit, CSE-FSL once per
         global round of ``h`` batches — this inverts that, so a resumed
         ``Trainer.run`` keeps the paper's C-batch aggregation schedule."""
         r = int(state["round"])
         return r if self.uploads_every_batch else r * fsl.h
 
     # -- accounting --------------------------------------------------------
-    def comm_profile(self, cm: CostModel, fsl: FSLConfig,
-                     batch_size: int) -> CommProfile:
+    def payload_specs(self, bundle: SplitModelBundle, fsl: FSLConfig,
+                      batch):
+        """Abstract (ShapeDtypeStruct) pytrees of ONE client's ONE upload
+        unit and the server's reply, recovered from the async hooks via
+        ``jax.eval_shape`` — the exact shapes the transport codecs see, so
+        ``Codec.wire_bytes`` accounting is exact, not approximate.
+        Returns ``(upload_spec, reply_spec)`` (``reply_spec`` is None for
+        non-blocking methods)."""
+        hooks = self.make_async_hooks(bundle, fsl)
+        state = jax.eval_shape(lambda k: self.init_state(bundle, fsl, k),
+                               jax.ShapeDtypeStruct((2,), jnp.uint32))
+        cslice = {k: jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), state[k])
+            for k in _stacked_keys(hooks)}
+        drop = 1 if hooks.unit_has_h_axis else 2            # [n,(h,)B,...]
+        unit = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(tuple(x.shape[drop:]), x.dtype),
+            batch)
+        lr = jax.ShapeDtypeStruct((), jnp.float32)
+        _, upload, _, _ = jax.eval_shape(hooks.client_compute, cslice, unit,
+                                         lr)
+        reply = None
+        if hooks.client_receive is not None:
+            sstate = state[hooks.server_key] if hooks.server_shared \
+                else cslice[hooks.server_key]
+            _, reply, _ = jax.eval_shape(hooks.server_consume, sstate,
+                                         upload, lr)
+        return upload, reply
+
+    def comm_profile(self, cm: CostModel, fsl: FSLConfig, batch_size: int,
+                     transport=None, payload_specs=None) -> CommProfile:
         n, q, lb = cm.n, cm.q, cm.label_bytes
         uploads = fsl.h if self.uploads_every_batch else 1
         smashed = n * uploads * q * batch_size
@@ -161,9 +337,19 @@ class FSLMethod:
         sync = 2 * n * (cm.w_client + aux)
         server = (n if self.server_replicated else 1) * (cm.w_server + aux)
         total = n * (cm.w_client + aux) + server
+        wire_up = wire_down = -1
+        if (transport is not None and payload_specs is not None
+                and not transport.is_identity):
+            up_spec, reply_spec = payload_specs
+            wire_up = n * uploads * transport.uplink_wire_bytes(up_spec)
+            if self.downloads_gradients and reply_spec is not None:
+                wire_down = n * uploads * transport.downlink_wire_bytes(
+                    reply_spec)
         return CommProfile(uplink_smashed=smashed, uplink_labels=labels,
                            downlink_grads=grads, model_sync=sync,
-                           server_storage=server, total_storage=total)
+                           server_storage=server, total_storage=total,
+                           uplink_smashed_wire=wire_up,
+                           downlink_grads_wire=wire_down)
 
     def __repr__(self):
         return f"<FSLMethod {self.name}>"
@@ -221,22 +407,3 @@ def client_mean(tree):
     """Mean over the stacked client axis without re-broadcasting."""
     return jax.tree_util.tree_map(
         lambda x: jnp.mean(x.astype(jnp.float32), 0).astype(x.dtype), tree)
-
-
-def scan_over_h(batch_step):
-    """Lift a per-mini-batch step to the ``[n, h, B, ...]`` round contract.
-
-    ``batch_step(state, batch_nb, lr)`` consumes one global mini-batch
-    ``[n, B, ...]``; the returned ``round_step`` scans it over the ``h``
-    axis (the baselines' h successive uploads) and means the metrics.
-    """
-    def round_step(state, batch, lr):
-        per_h = jax.tree_util.tree_map(lambda x: jnp.moveaxis(x, 1, 0), batch)
-
-        def one(st, b):
-            return batch_step(st, b, lr)
-
-        state, metrics = lax.scan(one, state, per_h)
-        return state, jax.tree_util.tree_map(jnp.mean, metrics)
-
-    return round_step

@@ -4,13 +4,21 @@ One *global round* t (paper Fig. 2, Algorithms 1 & 2):
 
   1. clients run ``h`` local mini-batch steps on (x_c, a_c) via the
      auxiliary-head local loss (Eq. 8-10) — **no server gradients**;
-  2. each client recomputes and "uploads" the smashed data of its last
-     batch with the *updated* client model g_{x_c^{t,h}} (Alg. 1 line 9);
+  2. each client recomputes and uploads the smashed data of its last
+     batch with the *updated* client model g_{x_c^{t,h}} (Alg. 1 line 9)
+     — the upload crosses the transport layer, where the configured
+     codec (``--codec int8`` etc.) compresses it;
   3. the server consumes the smashed batches **sequentially** in arrival
      order, updating its *single* model per batch (Eq. 11-13) — or, as a
      beyond-paper optimization, in one fused batched update;
   4. every C batches, FedAvg aggregation of (x_c, a_c) (Eq. 14), realized
      as a mean over the stacked client axis.
+
+The synchronous ``round_step`` is assembled from the same
+client_compute/server_consume hooks the event engine runs
+(:func:`repro.core.methods.base.assemble_round_step`); only the fused
+``server_update="batched"`` mode keeps a dedicated sync-only path (one
+batched gradient cannot be expressed as event-triggered consumption).
 
 Clients are *stacked* on a leading ``num_clients`` axis (sharded over the
 ("pod","data") mesh axes in the distributed launcher); between aggregations
@@ -26,7 +34,8 @@ from jax import lax
 
 from repro.configs.base import FSLConfig
 from repro.core.bundle import SplitModelBundle
-from repro.core.methods.base import (AsyncHooks, FSLMethod, client_mean,
+from repro.core.methods.base import (AsyncHooks, FSLMethod,
+                                     assemble_round_step, client_mean,
                                      fedavg, register, stack_clients)
 from repro.optim import make_optimizer
 
@@ -50,22 +59,7 @@ def init_state(bundle: SplitModelBundle, fsl: FSLConfig, key) -> Dict[str, Any]:
 
 
 # ---------------------------------------------------------------------------
-# Smashed-data quantization (beyond-paper uplink compression)
-# ---------------------------------------------------------------------------
-
-
-def quantize_smashed(smashed, dtype: str):
-    if dtype != "int8":
-        return smashed
-    flat = smashed.reshape(smashed.shape[0], -1)
-    scale = jnp.max(jnp.abs(flat), axis=-1, keepdims=True) / 127.0 + 1e-8
-    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
-    deq = (q.astype(jnp.float32) * scale).reshape(smashed.shape)
-    return deq.astype(smashed.dtype)
-
-
-# ---------------------------------------------------------------------------
-# Round step
+# Client phase (shared by both engines)
 # ---------------------------------------------------------------------------
 
 
@@ -97,15 +91,59 @@ def make_client_round(bundle: SplitModelBundle, fsl: FSLConfig):
         last_inputs = jax.tree_util.tree_map(lambda x: x[-1], inputs)
         last_labels = labels[-1]
         smashed = bundle.client_smashed(params["params"], last_inputs)
-        smashed = quantize_smashed(smashed, fsl.smashed_dtype)
         return ({"params": params, "opt": opt}, smashed, last_labels,
                 jnp.mean(losses))
 
     return client_round
 
 
+# ---------------------------------------------------------------------------
+# Round step
+# ---------------------------------------------------------------------------
+
+
+def _make_batched_round_step(bundle: SplitModelBundle, fsl: FSLConfig,
+                             transport=None):
+    """Beyond-paper sync-only mode: one fused server update over the
+    concatenated client batch (gradient = mean over clients; lr scaled by
+    n so the total step magnitude matches n sequential steps to first
+    order).  The uplink codec still applies per client before the merge —
+    the wire is crossed before the server fuses anything."""
+    from repro.transport import resolve_transport
+    tp = resolve_transport(transport, fsl)
+    _, opt_update = make_optimizer(fsl.optimizer)
+    client_round = make_client_round(bundle, fsl)
+    n = fsl.num_clients
+
+    def round_step(state, batch, lr):
+        inputs, labels = batch
+        cstates, smashed, slabels, closs = jax.vmap(
+            client_round, in_axes=(0, 0, None))(state["clients"],
+                                                (inputs, labels), lr)
+        if not tp.uplink.is_identity:
+            base = tp.unit_key(state["round"])
+            keys = jax.vmap(jax.random.fold_in, (None, 0))(base,
+                                                           jnp.arange(n))
+            smashed = jax.vmap(lambda x, k: tp.code_uplink(x, k))(smashed,
+                                                                  keys)
+        smashed = lax.stop_gradient(smashed)
+        merged_sm = smashed.reshape((-1,) + smashed.shape[2:])
+        merged_lb = slabels.reshape((-1,) + slabels.shape[2:])
+        loss, grads = jax.value_and_grad(bundle.server_loss)(
+            state["server"]["params"], merged_sm, merged_lb)
+        params, opt = opt_update(grads, state["server"]["opt"],
+                                 state["server"]["params"], lr * n)
+        new_state = {"clients": cstates,
+                     "server": {"params": params, "opt": opt},
+                     "round": state["round"] + 1}
+        metrics = {"client_loss": jnp.mean(closs), "server_loss": loss}
+        return new_state, metrics
+
+    return round_step
+
+
 def make_round_step(bundle: SplitModelBundle, fsl: FSLConfig,
-                    server_constraint=None):
+                    server_constraint=None, transport=None):
     """Returns ``round_step(state, batch, lr) -> (state, metrics)``.
 
     batch: (inputs, labels) pytrees with leading dims [n_clients, h, B, ...].
@@ -113,54 +151,16 @@ def make_round_step(bundle: SplitModelBundle, fsl: FSLConfig,
     constraint to each per-client (smashed, labels) the sequential server
     scan consumes — the §Perf fix for the data-axis sitting idle during
     the faithful event-triggered update (see EXPERIMENTS.md §Perf).
+    ``transport``: the wire (None resolves ``fsl.codec``).
+
+    The faithful sequential mode is assembled from the async hooks; the
+    fused ``server_update="batched"`` mode keeps its own builder.
     """
-    _, opt_update = make_optimizer(fsl.optimizer)
-    client_round = make_client_round(bundle, fsl)
-
-    def server_update(sstate, smashed, labels, lr):
-        """smashed: [n, B, ...]; labels: [n, B, ...]."""
-        smashed = lax.stop_gradient(smashed)
-        if fsl.server_update == "sequential":
-            # Faithful Eq. (11): one update per arriving client batch.
-            def one(carry, xs):
-                params, opt = carry
-                sm, lb = xs
-                if server_constraint is not None:
-                    sm = server_constraint(sm)
-                    lb = server_constraint(lb)
-                loss, grads = jax.value_and_grad(bundle.server_loss)(
-                    params, sm, lb)
-                params, opt = opt_update(grads, opt, params, lr)
-                return (params, opt), loss
-
-            (params, opt), losses = lax.scan(
-                one, (sstate["params"], sstate["opt"]), (smashed, labels),
-                unroll=fsl.unroll or 1)
-            return {"params": params, "opt": opt}, jnp.mean(losses)
-        # Beyond-paper: single fused update over the concatenated batch.
-        # Gradient = mean over clients; lr scaled by n so the total step
-        # magnitude matches n sequential steps to first order.
-        n = smashed.shape[0]
-        merged_sm = smashed.reshape((-1,) + smashed.shape[2:])
-        merged_lb = labels.reshape((-1,) + labels.shape[2:])
-        loss, grads = jax.value_and_grad(bundle.server_loss)(
-            sstate["params"], merged_sm, merged_lb)
-        params, opt = opt_update(grads, sstate["opt"], sstate["params"],
-                                 lr * n)
-        return {"params": params, "opt": opt}, loss
-
-    def round_step(state, batch, lr):
-        inputs, labels = batch
-        cstates, smashed, slabels, closs = jax.vmap(
-            client_round, in_axes=(0, 0, None))(state["clients"],
-                                                (inputs, labels), lr)
-        sstate, sloss = server_update(state["server"], smashed, slabels, lr)
-        new_state = {"clients": cstates, "server": sstate,
-                     "round": state["round"] + 1}
-        metrics = {"client_loss": jnp.mean(closs), "server_loss": sloss}
-        return new_state, metrics
-
-    return round_step
+    if fsl.server_update == "batched":
+        return _make_batched_round_step(bundle, fsl, transport=transport)
+    return assemble_round_step(make_async_hooks(bundle, fsl), fsl,
+                               server_constraint=server_constraint,
+                               transport=transport)
 
 
 def make_aggregate():
@@ -201,7 +201,8 @@ def make_async_hooks(bundle: SplitModelBundle, fsl: FSLConfig) -> AsyncHooks:
 
     return AsyncHooks(client_compute, server_consume,
                       uploads_per_round=1, batches_per_upload=fsl.h,
-                      server_key="server", server_shared=True)
+                      server_key="server", server_shared=True,
+                      unit_has_h_axis=True)
 
 
 # ---------------------------------------------------------------------------
@@ -221,9 +222,11 @@ class CSEFSL(FSLMethod):
     def init_state(self, bundle, fsl, key):
         return init_state(bundle, fsl, key)
 
-    def make_round_step(self, bundle, fsl, server_constraint=None):
+    def make_round_step(self, bundle, fsl, server_constraint=None,
+                        transport=None):
         return make_round_step(bundle, fsl,
-                               server_constraint=server_constraint)
+                               server_constraint=server_constraint,
+                               transport=transport)
 
     def make_aggregate(self):
         return make_aggregate()

@@ -1,5 +1,10 @@
 """FSL_AN [Han et al.]: auxiliary network (local client update, no gradient
 download) but per-client server replicas and per-batch smashed upload.
+
+The sync round step is assembled from the hooks below: per mini-batch the
+client takes its local aux-loss step, uploads the smashed batch computed
+with the *updated* client model, and the client's own server replica
+consumes it — non-blocking, no reply crosses the wire.
 """
 from __future__ import annotations
 
@@ -12,8 +17,7 @@ from jax import lax
 from repro.configs.base import FSLConfig
 from repro.core.bundle import SplitModelBundle
 from repro.core.methods.base import (AsyncHooks, FSLMethod, client_mean,
-                                     fedavg, register, scan_over_h,
-                                     stack_clients)
+                                     fedavg, register, stack_clients)
 from repro.optim import make_optimizer
 
 
@@ -27,34 +31,6 @@ def init_state(bundle: SplitModelBundle, fsl: FSLConfig, key) -> Dict[str, Any]:
             "servers": {"params": stack_clients(params["server"], n),
                         "opt": stack_clients(opt_init(params["server"]), n)},
             "round": jnp.zeros((), jnp.int32)}
-
-
-def make_batch_step(bundle: SplitModelBundle, fsl: FSLConfig):
-    """One mini-batch [n, B, ...]: aux local update + per-batch upload."""
-    _, opt_update = make_optimizer(fsl.optimizer)
-
-    def per_client(cstate, sstate, inputs, labels, lr):
-        # local (aux) update — no gradient wait
-        (closs, _), gc = jax.value_and_grad(
-            lambda pr: bundle.client_loss(pr["params"], pr["aux"],
-                                          inputs, labels),
-            has_aux=True)(cstate["params"])
-        cp, copt = opt_update(gc, cstate["opt"], cstate["params"], lr)
-        # per-batch smashed upload with the updated client model
-        smashed = lax.stop_gradient(bundle.client_smashed(cp["params"], inputs))
-        sloss, gs = jax.value_and_grad(bundle.server_loss)(
-            sstate["params"], smashed, labels)
-        sp, sopt = opt_update(gs, sstate["opt"], sstate["params"], lr)
-        return ({"params": cp, "opt": copt}, {"params": sp, "opt": sopt},
-                closs, sloss)
-
-    def step(state, batch, lr):
-        inputs, labels = batch
-        cs, ss, closs, sloss = jax.vmap(per_client, in_axes=(0, 0, 0, 0, None))(
-            state["clients"], state["servers"], inputs, labels, lr)
-        return ({"clients": cs, "servers": ss, "round": state["round"] + 1},
-                {"client_loss": jnp.mean(closs), "server_loss": jnp.mean(sloss)})
-    return step
 
 
 def make_async_hooks(bundle: SplitModelBundle, fsl: FSLConfig) -> AsyncHooks:
@@ -99,8 +75,7 @@ class FSLAN(FSLMethod):
     def init_state(self, bundle, fsl, key):
         return init_state(bundle, fsl, key)
 
-    def make_round_step(self, bundle, fsl, server_constraint=None):
-        return scan_over_h(make_batch_step(bundle, fsl))
+    # make_round_step: base default (assembled from the hooks).
 
     def make_aggregate(self):
         def aggregate(state):

@@ -1,5 +1,14 @@
 """FSL_MC [SplitFed]: per-client server replicas; per-batch smashed upload
 *and* per-batch gradient download (end-to-end backprop through the cut).
+
+Both engines run the same wire-level decomposition (the sync round step is
+assembled from the hooks below): the client forwards the smashed batch up,
+its own server replica steps and replies with the cut-layer gradient, and
+the client back-propagates the reply through its stage (vjp) — the joint
+end-to-end gradient of the fused implementation split by the chain rule.
+Note the decomposed path is wire-faithful: for MoE architectures the
+client-side load-balance regularizer term does not cross the cut and is
+(as on a real link) not part of the downloaded gradient.
 """
 from __future__ import annotations
 
@@ -7,12 +16,12 @@ from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from repro.configs.base import FSLConfig
 from repro.core.bundle import SplitModelBundle
 from repro.core.methods.base import (AsyncHooks, FSLMethod, client_mean,
-                                     fedavg, register, scan_over_h,
-                                     stack_clients)
+                                     fedavg, register, stack_clients)
 from repro.optim import make_optimizer
 
 
@@ -28,36 +37,12 @@ def init_state(bundle: SplitModelBundle, fsl: FSLConfig, key) -> Dict[str, Any]:
             "round": jnp.zeros((), jnp.int32)}
 
 
-def make_batch_step(bundle: SplitModelBundle, fsl: FSLConfig):
-    """One mini-batch [n, B, ...]: end-to-end split backprop per client."""
-    _, opt_update = make_optimizer(fsl.optimizer)
-
-    def per_client(cstate, sstate, inputs, labels, lr):
-        def loss_fn(cp, sp):
-            return bundle.e2e_loss(cp, sp, inputs, labels)
-        loss, (gc, gs) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
-            cstate["params"], sstate["params"])
-        cp, copt = opt_update(gc, cstate["opt"], cstate["params"], lr)
-        sp, sopt = opt_update(gs, sstate["opt"], sstate["params"], lr)
-        return ({"params": cp, "opt": copt}, {"params": sp, "opt": sopt}, loss)
-
-    def step(state, batch, lr):
-        inputs, labels = batch
-        cs, ss, loss = jax.vmap(per_client, in_axes=(0, 0, 0, 0, None))(
-            state["clients"], state["servers"], inputs, labels, lr)
-        return ({"clients": cs, "servers": ss, "round": state["round"] + 1},
-                {"loss": jnp.mean(loss)})
-    return step
-
-
 def make_async_hooks(bundle: SplitModelBundle, fsl: FSLConfig) -> AsyncHooks:
     """Event decomposition: h per-batch uploads, each BLOCKING on the cut
     gradient from the client's own server replica.  The joint e2e gradient
-    of the sync path splits by the chain rule: the server computes
+    of the fused step splits by the chain rule: the server computes
     d loss/d smashed and sends it down; the client back-propagates it
     through its stage (vjp)."""
-    from jax import lax
-
     _, opt_update = make_optimizer(fsl.optimizer)
 
     def client_compute(cslice, cbatch, lr):
@@ -97,10 +82,9 @@ class FSLMC(FSLMethod):
     def init_state(self, bundle, fsl, key):
         return init_state(bundle, fsl, key)
 
-    def make_round_step(self, bundle, fsl, server_constraint=None):
-        # per-client replicas run fully in parallel; no sequential server
-        # consumption exists for a constraint to rebalance.
-        return scan_over_h(make_batch_step(bundle, fsl))
+    # make_round_step: base default (assembled from the hooks; per-client
+    # replicas run fully in parallel, so no sequential server consumption
+    # exists for a server_constraint to rebalance).
 
     def make_aggregate(self):
         def aggregate(state):

@@ -1,5 +1,11 @@
 """FSL_OC [SplitFed]: one shared server model updated sequentially; clients
 still wait for cut-layer gradients; gradient clipping for stability.
+
+The sync round step is assembled from the hooks below: per mini-batch, all
+clients forward in parallel, the ONE shared server consumes the uploads
+sequentially in (zero-latency) arrival order emitting each cut gradient,
+and the clients back-propagate the replies in parallel — the
+straggler-amplifying per-batch round trips CSE-FSL removes.
 """
 from __future__ import annotations
 
@@ -12,8 +18,7 @@ from jax import lax
 from repro.configs.base import FSLConfig
 from repro.core.bundle import SplitModelBundle
 from repro.core.methods.base import (AsyncHooks, FSLMethod, client_mean,
-                                     fedavg, register, scan_over_h,
-                                     stack_clients)
+                                     fedavg, register, stack_clients)
 from repro.optim import clip_by_global_norm, make_optimizer
 
 
@@ -29,61 +34,11 @@ def init_state(bundle: SplitModelBundle, fsl: FSLConfig, key) -> Dict[str, Any]:
             "round": jnp.zeros((), jnp.int32)}
 
 
-def make_batch_step(bundle: SplitModelBundle, fsl: FSLConfig,
-                    server_constraint=None):
-    """One mini-batch [n, B, ...]: forward / sequential server / backward."""
-    _, opt_update = make_optimizer(fsl.optimizer)
-    clip = fsl.grad_clip or 1.0
-
-    def step(state, batch, lr):
-        inputs, labels = batch
-
-        # 1) client forwards (parallel)
-        def fwd(cp, x):
-            return bundle.client_smashed(cp, x)
-        smashed = jax.vmap(fwd)(state["clients"]["params"], inputs)
-
-        # 2) server: sequential scan over client arrivals; also emit the
-        #    cut-layer gradient for each client's backprop (the downlink).
-        def one(carry, xs):
-            params, opt = carry
-            sm, lb = xs
-            if server_constraint is not None:
-                sm = server_constraint(sm)
-                lb = server_constraint(lb)
-            loss, (gs, gsm) = jax.value_and_grad(
-                bundle.server_loss, argnums=(0, 1))(params, sm, lb)
-            gs, _ = clip_by_global_norm(gs, clip)
-            params, opt = opt_update(gs, opt, params, lr)
-            return (params, opt), (gsm, loss)
-
-        (sp, sopt), (gsm, losses) = lax.scan(
-            one, (state["server"]["params"], state["server"]["opt"]),
-            (smashed, labels))
-
-        # 3) client backward with the downloaded cut gradients (parallel)
-        def bwd(cstate, x, g):
-            def smash_fn(p):
-                return bundle.client_smashed(p, x)
-            _, vjp = jax.vjp(smash_fn, cstate["params"])
-            (gc,) = vjp(g)
-            gc, _ = clip_by_global_norm(gc, clip)
-            cp, copt = opt_update(gc, cstate["opt"], cstate["params"], lr)
-            return {"params": cp, "opt": copt}
-        cs = jax.vmap(bwd, in_axes=(0, 0, 0))(state["clients"], inputs, gsm)
-
-        return ({"clients": cs, "server": {"params": sp, "opt": sopt},
-                 "round": state["round"] + 1},
-                {"loss": jnp.mean(losses)})
-    return step
-
-
 def make_async_hooks(bundle: SplitModelBundle, fsl: FSLConfig) -> AsyncHooks:
     """Event decomposition: h per-batch uploads against the ONE shared
     server, serviced in arrival order, each BLOCKING on the cut-gradient
-    download — the straggler-amplifying round trips CSE-FSL removes.
-    Clipping mirrors the sync path: server grads clipped before the server
-    step, client grads clipped after the vjp."""
+    download.  Clipping: server grads clipped before the server step,
+    client grads clipped after the vjp."""
     _, opt_update = make_optimizer(fsl.optimizer)
     clip = fsl.grad_clip or 1.0
 
@@ -126,9 +81,8 @@ class FSLOC(FSLMethod):
     def init_state(self, bundle, fsl, key):
         return init_state(bundle, fsl, key)
 
-    def make_round_step(self, bundle, fsl, server_constraint=None):
-        return scan_over_h(make_batch_step(
-            bundle, fsl, server_constraint=server_constraint))
+    # make_round_step: base default (assembled from the hooks; the shared
+    # server scan honors server_constraint like CSE-FSL's).
 
     def make_aggregate(self):
         def aggregate(state):

@@ -1,11 +1,7 @@
-"""Compatibility shim — the CSE-FSL implementation moved to
-``repro.core.methods.cse_fsl`` and the (now method-agnostic) Trainer to
-``repro.core.trainer``.  Import from those modules in new code.
-"""
-from repro.core.methods.cse_fsl import (init_state, make_aggregate,
-                                        make_round_step, merged_params,
-                                        quantize_smashed)
-from repro.core.trainer import Trainer
-
-__all__ = ["init_state", "make_aggregate", "make_round_step",
-           "merged_params", "quantize_smashed", "Trainer"]
+"""Retired (PR 3): the CSE-FSL implementation lives in
+``repro.core.methods.cse_fsl`` and the method-agnostic Trainer in
+``repro.core.trainer``; smashed-data compression moved to
+``repro.transport`` codecs."""
+raise ImportError(
+    "repro.core.protocol was retired — use repro.core.methods "
+    "(get_method('cse_fsl')) and repro.core.trainer.Trainer")

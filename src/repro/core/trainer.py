@@ -61,16 +61,22 @@ class Trainer:
     donate: bool = True
     method: Optional[Union[str, FSLMethod]] = None  # default: fsl.method
     server_constraint: Optional[Callable] = None
+    # wire codecs: None resolves fsl.codec; a string names an uplink codec;
+    # a repro.transport.Transport sets both directions explicitly.
+    transport: Optional[Any] = None
 
     def __post_init__(self):
+        from repro.transport import resolve_transport
         m = self.method if self.method is not None else self.fsl.method
         if isinstance(m, str):
             m = get_method(m)
         self.method = m
+        self.transport = resolve_transport(self.transport, self.fsl)
         donate = (0,) if self.donate else ()
         self.step_fn = jax.jit(
             m.make_round_step(self.bundle, self.fsl,
-                              server_constraint=self.server_constraint),
+                              server_constraint=self.server_constraint,
+                              transport=self.transport),
             donate_argnums=donate)
         self.agg_fn = jax.jit(m.make_aggregate(), donate_argnums=donate)
 
@@ -98,9 +104,16 @@ class Trainer:
         """Deployable {"client", ["aux",] "server"} params for evaluation."""
         return self.method.merged_params(state)
 
-    def comm_profile(self, cost_model: CostModel,
-                     batch_size: int) -> CommProfile:
-        return self.method.comm_profile(cost_model, self.fsl, batch_size)
+    def comm_profile(self, cost_model: CostModel, batch_size: int,
+                     batch=None) -> CommProfile:
+        """With a ``batch``, the profile's ``*_wire`` fields are exact for
+        this trainer's transport (payload specs recovered via eval_shape)."""
+        specs = None
+        if batch is not None and not self.transport.is_identity:
+            specs = self.method.payload_specs(self.bundle, self.fsl, batch)
+        return self.method.comm_profile(cost_model, self.fsl, batch_size,
+                                        transport=self.transport,
+                                        payload_specs=specs)
 
     # -- the loop -----------------------------------------------------------
     def run(self, state, batcher, num_rounds: int, log_every: int = 0,
@@ -130,12 +143,13 @@ class Trainer:
             batch = batcher.next_round()
             if meter is not None and cost_model is not None and profile is None:
                 batch_size = jax.tree_util.tree_leaves(batch[1])[0].shape[2]
-                profile = self.comm_profile(cost_model, batch_size)
+                profile = self.comm_profile(cost_model, batch_size,
+                                            batch=batch)
             state, metrics = self.step_fn(state, batch, self.lr_at(rnd))
             if profile is not None:
-                meter.log("uplink_smashed", profile.uplink_smashed)
+                meter.log("uplink_smashed", profile.wire_uplink_smashed)
                 meter.log("uplink_labels", profile.uplink_labels)
-                meter.log("downlink_grads", profile.downlink_grads)
+                meter.log("downlink_grads", profile.wire_downlink_grads)
             aggregated = cadence.advance(self.fsl.h)
             if aggregated:
                 state = self.agg_fn(state)

@@ -1,0 +1,129 @@
+"""Per-tile quantization Pallas-TPU kernel for the wire transport layer.
+
+The uplink codecs (``repro.transport``) compress the smashed activations
+crossing the client->server wire.  Quantizing a whole payload with one
+scale lets a single outlier blow up the error of every other element, so
+the kernel computes an independent absmax scale per (bt, bc) tile — the
+scale side-channel costs 4 bytes per tile (~0.1% at the default 8x128
+tile) and keeps the quantization error proportional to the *local* range.
+
+Stochastic rounding makes the quantizer unbiased (E[decode(encode(x))]=x),
+which matters because the server *trains* on the decoded activations:
+biased rounding accumulates over thousands of optimizer steps.  The random
+bits are supplied by the caller (``jax.random.bits``) instead of the
+in-kernel TPU PRNG so the same kernel runs bit-identically under
+``interpret=True`` on CPU — `kernels/ref.py` holds the matching pure-jnp
+oracle the tests compare against exactly.
+
+Formats:
+  - ``int8``: round(x/scale) to [-127, 127], scale = tile absmax / 127.
+  - ``fp8``:  x/scale cast to float8_e4m3fn, scale = tile absmax / 448.
+    Stochastic rounding drops the 20 low mantissa bits of the fp32
+    bit pattern after adding 20 random bits — exact for e4m3-normal
+    values, and the carry into the exponent is precisely the round-up.
+
+Grid/BlockSpec conventions: grid (nR, nC) over a [R, C] view (payloads are
+flattened to 2D, last axis minor); one scale per grid step, emitted to a
+[nR, nC] fp32 output with (1, 1) blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+INT8_MAX = 127.0
+FP8_MAX = 448.0                  # float8_e4m3fn largest finite value
+_MANTISSA_DROP = 20              # fp32 (23) -> e4m3 (3) mantissa bits
+_SCALE_FLOOR = 1e-12             # all-zero tiles: keep scale finite
+
+
+def _stochastic_int8(y, bits):
+    """floor(y + u), u ~ U[0,1) from the top 24 bits of ``bits``."""
+    u = (bits >> 8).astype(jnp.float32) * (1.0 / (1 << 24))
+    return jnp.floor(y + u)
+
+
+def _stochastic_fp8(y, bits):
+    """Unbiased fp32 -> e4m3 rounding via the mantissa bit trick."""
+    b = lax.bitcast_convert_type(y, jnp.uint32)
+    b = (b + (bits & jnp.uint32((1 << _MANTISSA_DROP) - 1))) \
+        & jnp.uint32((0xFFFFFFFF << _MANTISSA_DROP) & 0xFFFFFFFF)
+    y = lax.bitcast_convert_type(b, jnp.float32)
+    return jnp.clip(y, -FP8_MAX, FP8_MAX)
+
+
+def _quant_kernel(x_ref, bits_ref, q_ref, s_ref, *, fmt: str,
+                  stochastic: bool):
+    x = x_ref[...].astype(jnp.float32)
+    qmax = INT8_MAX if fmt == "int8" else FP8_MAX
+    # multiply by the precomputed reciprocal: XLA rewrites division by a
+    # constant into this anyway, but only under jit — doing it explicitly
+    # keeps jitted/eager/interpret runs bit-identical (the ref oracle and
+    # the kernel tests rely on exact equality).
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), _SCALE_FLOOR) * (1.0 / qmax)
+    s_ref[...] = jnp.full(s_ref.shape, scale, jnp.float32)
+    y = x / scale
+    if fmt == "int8":
+        q = _stochastic_int8(y, bits_ref[...]) if stochastic else jnp.round(y)
+        q_ref[...] = jnp.clip(q, -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    else:
+        y = _stochastic_fp8(y, bits_ref[...]) if stochastic \
+            else jnp.clip(y, -FP8_MAX, FP8_MAX)
+        q_ref[...] = y.astype(jnp.float8_e4m3fn)
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def quantize_2d(x, bits, *, fmt: str = "int8", bt: int = 8, bc: int = 128,
+                stochastic: bool = True, interpret=None):
+    """Per-tile quantization of a [R, C] array.
+
+    Returns ``(q, scales)``: ``q`` is [R, C] int8 (or float8_e4m3fn),
+    ``scales`` is [ceil(R/bt), ceil(C/bc)] fp32.  ``bits`` must be a
+    uint32 [R, C] array when ``stochastic`` (ignored otherwise — pass the
+    same array to keep one call signature).  Tiles are padded with zeros,
+    which cannot raise a tile's absmax.
+    """
+    if interpret is None:
+        interpret = _interpret()
+    r, c = x.shape
+    rp, cp = pl.cdiv(r, bt) * bt, pl.cdiv(c, bc) * bc
+    if (rp, cp) != (r, c):
+        x = jnp.pad(x, ((0, rp - r), (0, cp - c)))
+        bits = jnp.pad(bits, ((0, rp - r), (0, cp - c)))
+    nr, nc = rp // bt, cp // bc
+    out_dtype = jnp.int8 if fmt == "int8" else jnp.float8_e4m3fn
+
+    q, scales = pl.pallas_call(
+        functools.partial(_quant_kernel, fmt=fmt, stochastic=stochastic),
+        grid=(nr, nc),
+        in_specs=[
+            pl.BlockSpec((bt, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((bt, bc), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rp, cp), out_dtype),
+            jax.ShapeDtypeStruct((nr, nc), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, bits.astype(jnp.uint32))
+    return q[:r, :c], scales
+
+
+def dequantize_2d(q, scales, *, bt: int = 8, bc: int = 128,
+                  dtype=jnp.float32):
+    """Exact inverse map of ``quantize_2d``'s scaling (plain jnp: the
+    per-element multiply needs no kernel and matches on every backend)."""
+    r, c = q.shape
+    smap = jnp.repeat(jnp.repeat(scales, bt, axis=0)[:r], bc, axis=1)[:, :c]
+    return (q.astype(jnp.float32) * smap).astype(dtype)

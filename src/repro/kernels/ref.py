@@ -73,6 +73,46 @@ def ssm_scan(u, dt, a, b_mat, c_mat, d_vec):
 
 
 # ---------------------------------------------------------------------------
+# Per-tile quantization (the wire transport codecs)
+# ---------------------------------------------------------------------------
+
+
+def _tile_view(x2d, bt: int, bc: int):
+    """Pad [R, C] to tile multiples and reshape to [nR, bt, nC, bc]."""
+    r, c = x2d.shape
+    rp = -(-r // bt) * bt
+    cp = -(-c // bc) * bc
+    x2d = jnp.pad(x2d, ((0, rp - r), (0, cp - c)))
+    return x2d.reshape(rp // bt, bt, cp // bc, bc)
+
+
+def quantize_2d(x, bits, *, fmt: str = "int8", bt: int = 8, bc: int = 128,
+                stochastic: bool = True):
+    """Pure-jnp oracle of ``kernels.quantize.quantize_2d`` — identical
+    arithmetic (same scale formula, same rounding bit tricks) so the
+    kernel tests can assert exact equality given the same random bits."""
+    from repro.kernels.quantize import (FP8_MAX, INT8_MAX, _SCALE_FLOOR,
+                                        _stochastic_fp8, _stochastic_int8)
+    r, c = x.shape
+    tiles = _tile_view(x.astype(jnp.float32), bt, bc)
+    bits_t = _tile_view(bits.astype(jnp.uint32), bt, bc)
+    qmax = INT8_MAX if fmt == "int8" else FP8_MAX
+    absmax = jnp.max(jnp.abs(tiles), axis=(1, 3))
+    scales = jnp.maximum(absmax, _SCALE_FLOOR) * (1.0 / qmax)   # [nR, nC]
+    y = tiles / scales[:, None, :, None]
+    if fmt == "int8":
+        q = _stochastic_int8(y, bits_t) if stochastic else jnp.round(y)
+        q = jnp.clip(q, -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    else:
+        y = _stochastic_fp8(y, bits_t) if stochastic \
+            else jnp.clip(y, -FP8_MAX, FP8_MAX)
+        q = y.astype(jnp.float8_e4m3fn)
+    nr, bt_, nc, bc_ = q.shape
+    q = q.reshape(nr * bt_, nc * bc_)[:r, :c]
+    return q, scales
+
+
+# ---------------------------------------------------------------------------
 # Sliding-window flash attention (forward)
 # ---------------------------------------------------------------------------
 

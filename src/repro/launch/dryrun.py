@@ -36,7 +36,8 @@ from repro.launch.specs import combo_supported
 
 def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             fsdp: str = "auto", server_update: str = "sequential",
-            shard_server_batch: bool = False, params_2d: bool = False,
+            shard_server_batch: bool = False, codec: str = "none",
+            params_2d: bool = False,
             cache_layout: str = "seq", mesh_shape=None,
             verbose: bool = True):
     cfg = get_config(arch)
@@ -53,6 +54,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             kw["fsdp_server"] = fsdp == "on"
         kw["server_update"] = server_update
         kw["shard_server_batch"] = shard_server_batch
+        kw["codec"] = codec
     if shape.kind == "decode":
         if params_2d:
             kw["params_2d"] = True
@@ -110,6 +112,9 @@ def main():
     ap.add_argument("--server-update", default="sequential",
                     choices=["sequential", "batched"])
     ap.add_argument("--shard-server-batch", action="store_true")
+    ap.add_argument("--codec", default="none",
+                    help="uplink wire codec compiled into the train step "
+                         "(any registered repro.transport codec)")
     ap.add_argument("--params-2d", action="store_true")
     ap.add_argument("--cache-layout", default="seq",
                     choices=["seq", "hd", "kvh"])
@@ -132,6 +137,7 @@ def main():
                               fsdp=args.fsdp,
                               server_update=args.server_update,
                               shard_server_batch=args.shard_server_batch,
+                              codec=args.codec,
                               params_2d=args.params_2d,
                               cache_layout=args.cache_layout,
                               mesh_shape=tuple(int(x) for x in

@@ -94,10 +94,11 @@ def build_train(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
                 fsl: Optional[FSLConfig] = None,
                 fsdp_server: Optional[bool] = None,
                 server_update: str = "sequential",
-                shard_server_batch: bool = False):
+                shard_server_batch: bool = False,
+                codec: str = "none"):
     fsl = fsl or fsl_for_mesh(mesh, shape)
     fsl = dataclasses.replace(fsl, server_update=server_update,
-                              unroll=cfg.dryrun_unroll)
+                              unroll=cfg.dryrun_unroll, codec=codec)
     bundle = transformer_bundle(cfg)
     constraint = None
     if shard_server_batch:
@@ -114,6 +115,8 @@ def build_train(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
                 x, jax.sharding.NamedSharding(mesh, spec))
 
     method = get_method(fsl.method)
+    # the wire transport resolves from fsl.codec; the lowered program
+    # carries the codec's quantize kernels at the upload boundary.
     step = method.make_round_step(bundle, fsl, server_constraint=constraint)
     if fsdp_server is None:
         fsdp_server = wants_fsdp(cfg)

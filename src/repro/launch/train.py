@@ -29,6 +29,7 @@ from repro.core.accounting import CommMeter, CostModel
 from repro.core.bundle import transformer_bundle
 from repro.core.methods import available_methods
 from repro.core.trainer import Trainer
+from repro.transport import available_codecs
 from repro.common import bytes_of, count_params
 from repro.data import FederatedBatcher, partition_dirichlet, partition_iid, \
     synthetic_lm
@@ -83,6 +84,10 @@ def main():
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--method", default="cse_fsl",
                     choices=list(available_methods()))
+    ap.add_argument("--codec", default="none",
+                    choices=list(available_codecs()),
+                    help="uplink wire codec (CommMeter reports the "
+                         "compressed wire bytes)")
     add_size_args(ap)
     ap.add_argument("--non-iid", action="store_true")
     ap.add_argument("--server-update", default="sequential")
@@ -94,7 +99,8 @@ def main():
     if args.size == "reduced":
         cfg = cfg.reduced()
     fsl = FSLConfig(num_clients=args.clients, h=args.h, lr=args.lr,
-                    method=args.method, server_update=args.server_update)
+                    method=args.method, server_update=args.server_update,
+                    codec=args.codec)
     bundle = transformer_bundle(cfg)
     fed = build_data(cfg, fsl, args.seq, args.samples, args.non_iid)
     batcher = LMBatcher(cfg, fed, args.batch, args.h)

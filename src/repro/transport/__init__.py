@@ -1,0 +1,330 @@
+"""Wire-level transport layer: what actually crosses the client-server link.
+
+CSE-FSL's whole contribution is cutting the bytes on the client->server
+wire, so the wire is a first-class boundary here instead of an analytic
+footnote: every method's upload (smashed activations + labels) and reply
+(cut-layer gradients) pass through a :class:`Transport` whose pluggable
+:class:`Codec`\\ s compress the floating-point payloads.  Both execution
+engines share the same boundary — the sync ``round_step`` is assembled
+around it (``repro.core.methods.base.assemble_round_step``) and the
+event-driven ``AsyncTrainer`` applies it per upload event — and the
+accounting layer uses ``Codec.wire_bytes`` so ``CommMeter`` reports the
+bytes a real wire would carry, not fp32 fiction.
+
+Built-in codecs (``--codec {none,int8,fp8,topk}``):
+
+  - ``none``: identity (the faithful-to-paper default; adds zero ops, so
+    runs are bitwise-identical to a transport-free build).
+  - ``int8`` / ``fp8``: per-tile absmax quantization with stochastic
+    rounding — a Pallas kernel (``repro.kernels.quantize``) running
+    ``interpret=True`` off-TPU, FedLite-style cut-layer compression.
+  - ``topk``: magnitude top-k sparsification per row (value+index pairs
+    on the wire).
+
+Add your own codec (see README "Transport & codecs")::
+
+    @register_codec
+    class SignCodec(Codec):
+        name = "sign"
+        def encode(self, x, *, key=None): ...
+        def decode(self, wire, spec): ...
+        def wire_bytes(self, spec): ...
+
+then ``--codec sign`` works everywhere a built-in does.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import quantize as qk
+
+# ---------------------------------------------------------------------------
+# Codec interface
+# ---------------------------------------------------------------------------
+
+
+def _spec_of(x) -> Tuple[Tuple[int, ...], Any]:
+    """(shape, dtype) of an array or ShapeDtypeStruct-like spec."""
+    return tuple(x.shape), x.dtype
+
+
+def _rows_cols(shape: Tuple[int, ...]) -> Tuple[int, int]:
+    """2D wire view of a payload: all leading axes fold into rows."""
+    if len(shape) == 0:
+        return 1, 1
+    c = shape[-1]
+    r = int(np.prod(shape[:-1])) if len(shape) > 1 else 1
+    return r, c
+
+
+class Codec:
+    """One direction of the wire.
+
+    ``encode(payload, key=None) -> wire`` maps a float array to the pytree
+    of arrays that would be serialized; ``decode(wire, spec) -> payload``
+    reconstructs an array of ``spec``'s shape/dtype; ``wire_bytes(spec)``
+    is the exact byte count of the encoded form (payload + side channels
+    like per-tile scales).  ``key`` feeds stochastic codecs; deterministic
+    codecs ignore it.  The simulation applies ``roundtrip`` at the
+    boundary — nothing is actually serialized, but the numerics and the
+    metered bytes are those of the real wire.
+    """
+
+    name: str = ""
+    is_identity: bool = False
+    stochastic: bool = False
+
+    def encode(self, payload, *, key=None) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def decode(self, wire: Dict[str, Any], spec):
+        raise NotImplementedError
+
+    def wire_bytes(self, spec) -> int:
+        raise NotImplementedError
+
+    def roundtrip(self, payload, *, key=None):
+        """decode(encode(x)) — the lossy map the receiving end trains on."""
+        return self.decode(self.encode(payload, key=key), payload)
+
+    def __repr__(self):
+        return f"<Codec {self.name}>"
+
+
+# ---------------------------------------------------------------------------
+# Built-in codecs
+# ---------------------------------------------------------------------------
+
+
+class IdentityCodec(Codec):
+    """The fp32 wire: encode/decode are the identity, bytes are raw."""
+
+    name = "none"
+    is_identity = True
+
+    def encode(self, payload, *, key=None):
+        return {"x": payload}
+
+    def decode(self, wire, spec):
+        return wire["x"]
+
+    def roundtrip(self, payload, *, key=None):
+        return payload
+
+    def wire_bytes(self, spec) -> int:
+        shape, dtype = _spec_of(spec)
+        return int(np.prod(shape)) * np.dtype(dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class _QuantCodec(Codec):
+    """Shared machinery of the int8/fp8 per-tile quantizers."""
+
+    bt: int = 8                  # tile rows (fp32 sublane)
+    bc: int = 128                # tile cols (lane width)
+    stochastic: bool = True
+
+    fmt = ""                     # set by subclasses
+    _itemsize = 1
+
+    def encode(self, payload, *, key=None):
+        shape, dtype = _spec_of(payload)
+        r, c = _rows_cols(shape)
+        x2 = payload.reshape(r, c)
+        if self.stochastic:
+            if key is None:
+                raise ValueError(f"codec {self.name!r} is stochastic; "
+                                 "pass a PRNG key to encode()")
+            bits = jax.random.bits(key, (r, c), jnp.uint32)
+        else:
+            bits = jnp.zeros((r, c), jnp.uint32)
+        q, scales = qk.quantize_2d(x2, bits, fmt=self.fmt, bt=self.bt,
+                                   bc=self.bc, stochastic=self.stochastic)
+        return {"q": q, "scale": scales}
+
+    def decode(self, wire, spec):
+        shape, dtype = _spec_of(spec)
+        r, c = _rows_cols(shape)
+        x2 = qk.dequantize_2d(wire["q"].reshape(r, c), wire["scale"],
+                              bt=self.bt, bc=self.bc, dtype=dtype)
+        return x2.reshape(shape)
+
+    def wire_bytes(self, spec) -> int:
+        shape, _ = _spec_of(spec)
+        r, c = _rows_cols(shape)
+        tiles = -(-r // self.bt) * -(-c // self.bc)
+        return r * c * self._itemsize + tiles * 4
+
+
+class Int8Codec(_QuantCodec):
+    name = "int8"
+    fmt = "int8"
+    _itemsize = 1
+
+
+class Fp8Codec(_QuantCodec):
+    name = "fp8"
+    fmt = "fp8"
+    _itemsize = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCodec(Codec):
+    """Magnitude top-k per row: (value, index) pairs cross the wire and
+    the receiver scatters them back into a dense zero payload."""
+
+    ratio: float = 0.1           # kept fraction of the last axis
+    name = "topk"
+
+    def _k(self, c: int) -> int:
+        return max(1, min(c, int(round(self.ratio * c))))
+
+    def encode(self, payload, *, key=None):
+        shape, _ = _spec_of(payload)
+        r, c = _rows_cols(shape)
+        x2 = payload.reshape(r, c).astype(jnp.float32)
+        _, idx = jax.lax.top_k(jnp.abs(x2), self._k(c))
+        vals = jnp.take_along_axis(x2, idx, axis=-1)
+        return {"values": vals, "indices": idx.astype(jnp.int32)}
+
+    def decode(self, wire, spec):
+        shape, dtype = _spec_of(spec)
+        r, c = _rows_cols(shape)
+        dense = jnp.zeros((r, c), jnp.float32)
+        rows = jnp.arange(r)[:, None]
+        dense = dense.at[rows, wire["indices"]].set(wire["values"])
+        return dense.reshape(shape).astype(dtype)
+
+    def wire_bytes(self, spec) -> int:
+        shape, _ = _spec_of(spec)
+        r, c = _rows_cols(shape)
+        return r * self._k(c) * (4 + 4)      # fp32 value + int32 index
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_CODECS: Dict[str, Codec] = {}
+
+
+def register_codec(cls):
+    """Class decorator: makes ``cls.name`` resolvable by :func:`get_codec`."""
+    if not cls.name:
+        raise ValueError(f"{cls.__name__} must set a non-empty .name")
+    _CODECS[cls.name] = cls()
+    return cls
+
+
+for _cls in (IdentityCodec, Int8Codec, Fp8Codec, TopKCodec):
+    register_codec(_cls)
+
+
+def get_codec(name: Union[str, Codec]) -> Codec:
+    if isinstance(name, Codec):
+        return name
+    try:
+        return _CODECS[name]
+    except KeyError:
+        raise KeyError(f"unknown codec {name!r}; registered: "
+                       f"{available_codecs()}") from None
+
+
+def available_codecs() -> tuple:
+    return tuple(sorted(_CODECS))
+
+
+# ---------------------------------------------------------------------------
+# Transport: the two directions + key discipline
+# ---------------------------------------------------------------------------
+
+
+def _is_float(leaf) -> bool:
+    return jnp.issubdtype(leaf.dtype, jnp.floating)
+
+
+@dataclasses.dataclass(frozen=True)
+class Transport:
+    """The wire between clients and server: an uplink codec for the
+    smashed-data payloads and a downlink codec for gradient replies.
+    Integer leaves (labels) pass through uncoded; every float leaf of a
+    payload pytree is coded independently (``fold_in`` by leaf index, so
+    stochastic codecs stay deterministic per (seed, round, client, leaf)).
+    """
+
+    uplink: Codec = _CODECS["none"]
+    downlink: Codec = _CODECS["none"]
+    seed: int = 0
+
+    @property
+    def is_identity(self) -> bool:
+        return self.uplink.is_identity and self.downlink.is_identity
+
+    def unit_key(self, unit, client=None, salt: int = 0):
+        """The stochastic-codec key for upload unit ``unit`` (the global
+        ``state["round"]`` counter) of ``client``; ``salt`` 0 = uplink,
+        1 = downlink.  THE single derivation both engines use — the sync
+        assembly and the async event loop must salt identically so a
+        zero-latency async run reproduces the sync quantization noise.
+        ``client=None`` returns the pre-client key (vmap-fold client ids
+        onto it with ``jax.vmap(jax.random.fold_in, (None, 0))``)."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed),
+                                 unit * 2 + salt)
+        if client is not None:
+            key = jax.random.fold_in(key, client)
+        return key
+
+    def _code(self, codec: Codec, payload, key):
+        if codec.is_identity or payload is None:
+            return payload
+        leaves, treedef = jax.tree_util.tree_flatten(payload)
+        out = []
+        for i, leaf in enumerate(leaves):
+            if _is_float(leaf):
+                lk = jax.random.fold_in(key, i) if key is not None else None
+                leaf = codec.roundtrip(leaf, key=lk)
+            out.append(leaf)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def code_uplink(self, payload, key=None):
+        return self._code(self.uplink, payload, key)
+
+    def code_downlink(self, payload, key=None):
+        return self._code(self.downlink, payload, key)
+
+    def _wire(self, codec: Codec, spec_tree) -> int:
+        """Exact wire bytes of the FLOAT leaves of a payload spec (integer
+        side channels — labels — are accounted separately by CommProfile)."""
+        return sum(codec.wire_bytes(leaf)
+                   for leaf in jax.tree_util.tree_leaves(spec_tree)
+                   if _is_float(leaf))
+
+    def uplink_wire_bytes(self, spec_tree) -> int:
+        return self._wire(self.uplink, spec_tree)
+
+    def downlink_wire_bytes(self, spec_tree) -> int:
+        return self._wire(self.downlink, spec_tree)
+
+
+def make_transport(uplink: Union[str, Codec] = "none",
+                   downlink: Union[str, Codec] = "none",
+                   seed: int = 0) -> Transport:
+    return Transport(uplink=get_codec(uplink), downlink=get_codec(downlink),
+                     seed=seed)
+
+
+def resolve_transport(transport, fsl=None) -> Transport:
+    """Normalize a Trainer/method ``transport=`` argument: ``None`` reads
+    ``fsl.codec``, a string names an uplink codec, a Transport passes
+    through."""
+    if isinstance(transport, Transport):
+        return transport
+    if transport is None:
+        name = getattr(fsl, "codec", "none") if fsl is not None else "none"
+        return make_transport(name or "none")
+    return make_transport(transport)

@@ -1,0 +1,214 @@
+"""Frozen pre-refactor per-method round steps (PR 2 state of the tree).
+
+These are verbatim copies of the fused ``make_round_step`` /
+``make_batch_step`` builders that the wire-level transport refactor
+replaced with the hook-assembled default
+(``repro.core.methods.base.assemble_round_step``).  They exist ONLY as
+the oracle for the bitwise-equivalence tests in ``test_methods.py``: the
+identity-codec assembled step must reproduce them bit for bit, forever.
+Do not "fix" or modernize them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.optim import clip_by_global_norm, make_optimizer
+
+
+def _scan_over_h(batch_step):
+    """Pre-refactor lift of a per-mini-batch step to [n, h, B, ...]."""
+    def round_step(state, batch, lr):
+        per_h = jax.tree_util.tree_map(lambda x: jnp.moveaxis(x, 1, 0), batch)
+
+        def one(st, b):
+            return batch_step(st, b, lr)
+
+        state, metrics = lax.scan(one, state, per_h)
+        return state, jax.tree_util.tree_map(jnp.mean, metrics)
+
+    return round_step
+
+
+# ---------------------------------------------------------------------------
+# cse_fsl (pre-refactor make_round_step, sequential server update)
+# ---------------------------------------------------------------------------
+
+
+def _cse_client_round(bundle, fsl):
+    _, opt_update = make_optimizer(fsl.optimizer)
+
+    def client_round(cstate, cbatch, lr):
+        inputs, labels = cbatch
+
+        def one_step(carry, b):
+            params, opt = carry
+            binputs, blabels = b
+            (loss, _), grads = jax.value_and_grad(
+                lambda pr: bundle.client_loss(pr["params"], pr["aux"],
+                                              binputs, blabels),
+                has_aux=True)(params)
+            new_params, new_opt = opt_update(grads, opt, params, lr)
+            return (new_params, new_opt), loss
+
+        (params, opt), losses = lax.scan(
+            one_step, (cstate["params"], cstate["opt"]), (inputs, labels),
+            unroll=fsl.unroll or 1)
+        last_inputs = jax.tree_util.tree_map(lambda x: x[-1], inputs)
+        last_labels = labels[-1]
+        smashed = bundle.client_smashed(params["params"], last_inputs)
+        return ({"params": params, "opt": opt}, smashed, last_labels,
+                jnp.mean(losses))
+
+    return client_round
+
+
+def cse_fsl_round_step(bundle, fsl):
+    _, opt_update = make_optimizer(fsl.optimizer)
+    client_round = _cse_client_round(bundle, fsl)
+
+    def server_update(sstate, smashed, labels, lr):
+        smashed = lax.stop_gradient(smashed)
+
+        def one(carry, xs):
+            params, opt = carry
+            sm, lb = xs
+            loss, grads = jax.value_and_grad(bundle.server_loss)(
+                params, sm, lb)
+            params, opt = opt_update(grads, opt, params, lr)
+            return (params, opt), loss
+
+        (params, opt), losses = lax.scan(
+            one, (sstate["params"], sstate["opt"]), (smashed, labels),
+            unroll=fsl.unroll or 1)
+        return {"params": params, "opt": opt}, jnp.mean(losses)
+
+    def round_step(state, batch, lr):
+        inputs, labels = batch
+        cstates, smashed, slabels, closs = jax.vmap(
+            client_round, in_axes=(0, 0, None))(state["clients"],
+                                                (inputs, labels), lr)
+        sstate, sloss = server_update(state["server"], smashed, slabels, lr)
+        new_state = {"clients": cstates, "server": sstate,
+                     "round": state["round"] + 1}
+        metrics = {"client_loss": jnp.mean(closs), "server_loss": sloss}
+        return new_state, metrics
+
+    return round_step
+
+
+# ---------------------------------------------------------------------------
+# fsl_mc (pre-refactor fused e2e batch step)
+# ---------------------------------------------------------------------------
+
+
+def fsl_mc_round_step(bundle, fsl):
+    _, opt_update = make_optimizer(fsl.optimizer)
+
+    def per_client(cstate, sstate, inputs, labels, lr):
+        def loss_fn(cp, sp):
+            return bundle.e2e_loss(cp, sp, inputs, labels)
+        loss, (gc, gs) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+            cstate["params"], sstate["params"])
+        cp, copt = opt_update(gc, cstate["opt"], cstate["params"], lr)
+        sp, sopt = opt_update(gs, sstate["opt"], sstate["params"], lr)
+        return ({"params": cp, "opt": copt}, {"params": sp, "opt": sopt},
+                loss)
+
+    def step(state, batch, lr):
+        inputs, labels = batch
+        cs, ss, loss = jax.vmap(per_client, in_axes=(0, 0, 0, 0, None))(
+            state["clients"], state["servers"], inputs, labels, lr)
+        return ({"clients": cs, "servers": ss, "round": state["round"] + 1},
+                {"loss": jnp.mean(loss)})
+
+    return _scan_over_h(step)
+
+
+# ---------------------------------------------------------------------------
+# fsl_oc (pre-refactor sequential shared-server batch step)
+# ---------------------------------------------------------------------------
+
+
+def fsl_oc_round_step(bundle, fsl):
+    _, opt_update = make_optimizer(fsl.optimizer)
+    clip = fsl.grad_clip or 1.0
+
+    def step(state, batch, lr):
+        inputs, labels = batch
+
+        def fwd(cp, x):
+            return bundle.client_smashed(cp, x)
+        smashed = jax.vmap(fwd)(state["clients"]["params"], inputs)
+
+        def one(carry, xs):
+            params, opt = carry
+            sm, lb = xs
+            loss, (gs, gsm) = jax.value_and_grad(
+                bundle.server_loss, argnums=(0, 1))(params, sm, lb)
+            gs, _ = clip_by_global_norm(gs, clip)
+            params, opt = opt_update(gs, opt, params, lr)
+            return (params, opt), (gsm, loss)
+
+        (sp, sopt), (gsm, losses) = lax.scan(
+            one, (state["server"]["params"], state["server"]["opt"]),
+            (smashed, labels))
+
+        def bwd(cstate, x, g):
+            def smash_fn(p):
+                return bundle.client_smashed(p, x)
+            _, vjp = jax.vjp(smash_fn, cstate["params"])
+            (gc,) = vjp(g)
+            gc, _ = clip_by_global_norm(gc, clip)
+            cp, copt = opt_update(gc, cstate["opt"], cstate["params"], lr)
+            return {"params": cp, "opt": copt}
+        cs = jax.vmap(bwd, in_axes=(0, 0, 0))(state["clients"], inputs, gsm)
+
+        return ({"clients": cs, "server": {"params": sp, "opt": sopt},
+                 "round": state["round"] + 1},
+                {"loss": jnp.mean(losses)})
+
+    return _scan_over_h(step)
+
+
+# ---------------------------------------------------------------------------
+# fsl_an (pre-refactor fused aux + per-batch upload step)
+# ---------------------------------------------------------------------------
+
+
+def fsl_an_round_step(bundle, fsl):
+    _, opt_update = make_optimizer(fsl.optimizer)
+
+    def per_client(cstate, sstate, inputs, labels, lr):
+        (closs, _), gc = jax.value_and_grad(
+            lambda pr: bundle.client_loss(pr["params"], pr["aux"],
+                                          inputs, labels),
+            has_aux=True)(cstate["params"])
+        cp, copt = opt_update(gc, cstate["opt"], cstate["params"], lr)
+        smashed = lax.stop_gradient(bundle.client_smashed(cp["params"],
+                                                          inputs))
+        sloss, gs = jax.value_and_grad(bundle.server_loss)(
+            sstate["params"], smashed, labels)
+        sp, sopt = opt_update(gs, sstate["opt"], sstate["params"], lr)
+        return ({"params": cp, "opt": copt}, {"params": sp, "opt": sopt},
+                closs, sloss)
+
+    def step(state, batch, lr):
+        inputs, labels = batch
+        cs, ss, closs, sloss = jax.vmap(per_client,
+                                        in_axes=(0, 0, 0, 0, None))(
+            state["clients"], state["servers"], inputs, labels, lr)
+        return ({"clients": cs, "servers": ss, "round": state["round"] + 1},
+                {"client_loss": jnp.mean(closs),
+                 "server_loss": jnp.mean(sloss)})
+
+    return _scan_over_h(step)
+
+
+LEGACY_ROUND_STEPS = {
+    "cse_fsl": cse_fsl_round_step,
+    "fsl_mc": fsl_mc_round_step,
+    "fsl_oc": fsl_oc_round_step,
+    "fsl_an": fsl_an_round_step,
+}

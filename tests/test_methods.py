@@ -119,6 +119,115 @@ def test_unified_trainer_bitwise_matches_legacy_cse_loop():
             assert row[k] == v, (k, row, lm)
 
 
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_identity_codec_round_step_bitwise_matches_prerefactor(method):
+    """THE refactor invariant: the hook-assembled sync round step with the
+    identity codec reproduces the pre-refactor fused per-method step bit
+    for bit — state pytrees AND metrics — over multiple rounds.  The
+    oracles are frozen verbatim copies in tests/_legacy_steps.py."""
+    from _legacy_steps import LEGACY_ROUND_STEPS
+
+    n, h, rounds = 2, 2, 2
+    bundle, fed = _setup(n=n)
+    fsl = FSLConfig(num_clients=n, h=h, lr=0.05, method=method,
+                    grad_clip=1.0 if method == "fsl_oc" else 0.0)
+    m = get_method(method)
+    legacy = jax.jit(LEGACY_ROUND_STEPS[method](bundle, fsl))
+    new = jax.jit(m.make_round_step(bundle, fsl))
+    s_legacy = m.init_state(bundle, fsl, jax.random.PRNGKey(0))
+    s_new = m.init_state(bundle, fsl, jax.random.PRNGKey(0))
+    batcher = FederatedBatcher(fed, 8, h, seed=0)
+    for _ in range(rounds):
+        b = batcher.next_round()
+        b = (jnp.asarray(b[0]), jnp.asarray(b[1]))
+        s_legacy, m_legacy = legacy(s_legacy, b, 0.05)
+        s_new, m_new = new(s_new, b, 0.05)
+        assert set(m_legacy) == set(m_new)
+        for k in m_legacy:
+            assert float(m_legacy[k]) == float(m_new[k]), (method, k)
+    for a, b_ in zip(jax.tree_util.tree_leaves(s_legacy),
+                     jax.tree_util.tree_leaves(s_new)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
+def test_async_identity_transport_bitwise_matches_default():
+    """AsyncTrainer with an explicit identity transport inserts zero codec
+    ops: bitwise-identical to the pre-refactor (transport-free) engine."""
+    from repro.core.async_trainer import AsyncTrainer, LognormalLatency
+
+    n, h = 2, 2
+    bundle, fed = _setup(n=n)
+    fsl = FSLConfig(num_clients=n, h=h, lr=0.05)
+
+    def one_run(transport):
+        t = AsyncTrainer(bundle, fsl, latency=LognormalLatency(), seed=3,
+                         transport=transport)
+        return t.run(t.init(0), FederatedBatcher(fed, 8, h, seed=0), 2)[0]
+
+    for a, b in zip(jax.tree_util.tree_leaves(one_run(None)),
+                    jax.tree_util.tree_leaves(one_run("none"))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_cse_h1_unit_contract_async_matches_sync():
+    """Regression: at h=1 CSE's per-upload unit still carries the h axis
+    (unit_has_h_axis) — the async engine must not scan the batch axis."""
+    from repro.core.async_trainer import AsyncTrainer, ConstantLatency
+
+    n = 2
+    bundle, fed = _setup(n=n)
+    fsl = FSLConfig(num_clients=n, h=1, lr=0.05)
+    sync = Trainer(bundle, fsl, donate=False)
+    s_sync, _ = sync.run(sync.init(0), FederatedBatcher(fed, 8, 1, seed=0),
+                         2)
+    asyn = AsyncTrainer(bundle, fsl, latency=ConstantLatency(0.0, 0.0, 0.0))
+    s_async, _ = asyn.run(asyn.init(0), FederatedBatcher(fed, 8, 1, seed=0),
+                          2)
+    for a, b in zip(jax.tree_util.tree_leaves(s_sync),
+                    jax.tree_util.tree_leaves(s_async)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+@pytest.mark.parametrize("h", (1, 4))
+def test_analytic_helpers_derive_from_comm_profile(method, h):
+    """Satellite: comm_one_epoch/server_storage/total_storage now derive
+    from CommProfile; they must still equal the hand-written Table II
+    formulas (frozen here), so Table II has one source of truth."""
+    from repro.core.accounting import comm_one_epoch
+
+    cm = CostModel(n=3, q=128, d_local=96, w_client=10_000, w_server=50_000,
+                   aux=700)
+    smashed = cm.n * cm.q * cm.d_local
+    labels = cm.n * cm.label_bytes * cm.d_local
+    expect = {
+        "fsl_mc": (smashed, labels, smashed, 2 * cm.n * cm.w_client),
+        "fsl_oc": (smashed, labels, smashed, 2 * cm.n * cm.w_client),
+        "fsl_an": (smashed, labels, 0, 2 * cm.n * (cm.w_client + cm.aux)),
+        "cse_fsl": (smashed // h, labels // h, 0,
+                    2 * cm.n * (cm.w_client + cm.aux)),
+    }[method]
+    got = comm_one_epoch(cm, method, h=h)
+    assert (got["uplink_smashed"], got["uplink_labels"],
+            got["downlink_grads"], got["model_sync"]) == expect
+    assert got["total"] == sum(expect)
+    storage = {
+        "fsl_mc": cm.n * cm.w_server,
+        "fsl_oc": cm.w_server,
+        "fsl_an": cm.n * (cm.w_server + cm.aux),
+        "cse_fsl": cm.w_server + cm.aux,
+    }[method]
+    assert server_storage(cm, method) == storage
+    client_side = cm.n * (cm.w_client
+                          + (cm.aux if method in ("fsl_an", "cse_fsl")
+                             else 0))
+    assert total_storage(cm, method) == client_side + storage
+    with pytest.raises(ValueError):
+        comm_one_epoch(cm, "fsl_sage")
+
+
 def test_baseline_h_scan_runs_h_batches():
     """With the unified [n, h, B] contract a baseline round at h=3 makes 3
     optimizer steps — its round counter (incremented per inner batch)

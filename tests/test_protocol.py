@@ -11,8 +11,7 @@ from repro.configs.registry import get_config
 from repro.core.bundle import cnn_bundle, transformer_bundle
 from repro.core.methods import get_method
 from repro.core.methods.cse_fsl import (init_state, make_aggregate,
-                                        make_round_step, merged_params,
-                                        quantize_smashed)
+                                        make_round_step, merged_params)
 from repro.core.trainer import Trainer
 from repro.launch.specs import train_batch_specs
 from repro.models.cnn import CIFAR10
@@ -134,14 +133,13 @@ def test_server_sequential_order_nearly_invariant():
     assert rel < 5e-3, rel
 
 
-def test_quantize_smashed_int8_roundtrip():
-    x = jax.random.normal(jax.random.PRNGKey(0), (4, 16, 32)) * 3.0
-    q = quantize_smashed(x, "int8")
-    assert q.shape == x.shape and q.dtype == x.dtype
-    err = np.abs(np.asarray(q - x)) / (np.abs(np.asarray(x)).max() + 1e-9)
-    assert err.max() < 1e-2
-    np.testing.assert_array_equal(np.asarray(quantize_smashed(x, "")),
-                                  np.asarray(x))
+def test_retired_shims_raise_import_error():
+    """PR 3 retired the protocol/baselines shims: importing them must fail
+    loudly with a pointer at the methods API."""
+    import importlib
+    for mod in ("repro.core.protocol", "repro.core.baselines"):
+        with pytest.raises(ImportError, match="repro.core.methods"):
+            importlib.import_module(mod)
 
 
 def test_merged_params_structure():

@@ -77,12 +77,12 @@ def test_partial_participation_batcher():
 
 
 def test_int8_smashed_end_to_end():
-    """CSE-FSL round with int8 smashed upload stays finite and close to the
-    full-precision round's server update."""
+    """CSE-FSL round with the int8 uplink codec stays finite and close to
+    the full-precision round's server update (transformer bundle)."""
     cfg, _, bundle, shape = _setup(n=2, h=1)
     from repro.core.methods.cse_fsl import make_round_step
     fsl_fp = FSLConfig(num_clients=2, h=1)
-    fsl_q = FSLConfig(num_clients=2, h=1, smashed_dtype="int8")
+    fsl_q = FSLConfig(num_clients=2, h=1, codec="int8")
     batch = train_batch_specs(cfg, shape, fsl_fp, as_spec=False)
     s0 = init_state(bundle, fsl_fp, jax.random.PRNGKey(0))
     s_fp, _ = jax.jit(make_round_step(bundle, fsl_fp))(s0, batch, 0.05)

@@ -1,0 +1,299 @@
+"""The wire transport layer: codec registry, encode/decode round trips,
+exact wire-byte accounting (including the int8 ~4x acceptance check against
+live CommMeter totals), and the Pallas quantize kernel vs its pure-jnp
+oracle in interpret mode on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FSLConfig
+from repro.core.accounting import CommMeter, CostModel
+from repro.core.bundle import cnn_bundle
+from repro.core.methods import get_method
+from repro.core.trainer import Trainer
+from repro.data import FederatedBatcher, partition_iid, \
+    synthetic_classification
+from repro.kernels import quantize as qk
+from repro.kernels import ref
+from repro.models.cnn import CIFAR10
+from repro.transport import (Transport, available_codecs, get_codec,
+                             make_transport, resolve_transport)
+
+ALL_CODECS = ("none", "int8", "fp8", "topk")
+
+
+def _setup(n=2, samples=240, seed=0):
+    bundle = cnn_bundle(CIFAR10)
+    x, y = synthetic_classification(samples, CIFAR10.in_shape, 10, seed=seed,
+                                    signal=12.0)
+    return bundle, partition_iid(x, y, n, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Registry + Transport plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_codec_registry():
+    assert set(ALL_CODECS) <= set(available_codecs())
+    with pytest.raises(KeyError, match="unknown codec"):
+        get_codec("zstd")
+
+
+def test_resolve_transport_reads_fsl_codec():
+    fsl = FSLConfig(codec="int8")
+    tp = resolve_transport(None, fsl)
+    assert tp.uplink.name == "int8" and tp.downlink.is_identity
+    assert resolve_transport(None, FSLConfig()).is_identity
+    assert resolve_transport("topk", fsl).uplink.name == "topk"
+    explicit = make_transport("fp8", downlink="int8")
+    assert resolve_transport(explicit, fsl) is explicit
+
+
+def test_transport_codes_float_leaves_only():
+    """Labels (int leaves) must cross the wire untouched; float leaves get
+    the lossy round trip."""
+    tp = make_transport("int8")
+    smashed = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 32))
+    labels = jnp.arange(4, dtype=jnp.int32)
+    out_sm, out_lb = tp.code_uplink((smashed, labels),
+                                    key=jax.random.PRNGKey(1))
+    np.testing.assert_array_equal(np.asarray(out_lb), np.asarray(labels))
+    assert not np.array_equal(np.asarray(out_sm), np.asarray(smashed))
+    assert np.max(np.abs(np.asarray(out_sm - smashed))) < 0.1
+
+
+# ---------------------------------------------------------------------------
+# Round trips + wire_bytes exactness
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL_CODECS)
+@pytest.mark.parametrize("shape", [(6, 10, 40), (32, 64), (5, 131)])
+def test_roundtrip_shape_dtype_and_wire_bytes_exact(name, shape):
+    """decode(encode(x)) preserves shape/dtype; wire_bytes(spec) equals the
+    summed nbytes of the arrays encode actually emits — the accounting can
+    never drift from the wire format."""
+    c = get_codec(name)
+    x = jax.random.normal(jax.random.PRNGKey(0), shape) * 2.0
+    wire = c.encode(x, key=jax.random.PRNGKey(1))
+    y = c.decode(wire, x)
+    assert y.shape == x.shape and y.dtype == x.dtype
+    emitted = sum(np.asarray(l).nbytes
+                  for l in jax.tree_util.tree_leaves(wire))
+    assert c.wire_bytes(x) == emitted
+    assert c.wire_bytes(jax.ShapeDtypeStruct(shape, jnp.float32)) == emitted
+
+
+def test_identity_roundtrip_is_exact_and_int8_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(2), (16, 256)) * 3.0
+    np.testing.assert_array_equal(
+        np.asarray(get_codec("none").roundtrip(x)), np.asarray(x))
+    c8 = get_codec("int8")
+    y = c8.roundtrip(x, key=jax.random.PRNGKey(3))
+    # stochastic rounding moves each element by < 1 LSB of its tile scale
+    scales = np.asarray(c8.encode(x, key=jax.random.PRNGKey(3))["scale"])
+    assert np.max(np.abs(np.asarray(y - x))) <= scales.max() * (1 + 1e-6)
+
+
+def test_stochastic_int8_deterministic_per_key_and_unbiased():
+    c8 = get_codec("int8")
+    # one tile: absmax 1.0, so 0.3 sits between grid points 38 and 39
+    x = np.full((8, 128), 0.3, np.float32)
+    x[0, 0] = 1.0
+    x = jnp.asarray(x)
+    y1 = c8.roundtrip(x, key=jax.random.PRNGKey(7))
+    y2 = c8.roundtrip(x, key=jax.random.PRNGKey(7))
+    y3 = c8.roundtrip(x, key=jax.random.PRNGKey(8))
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    assert not np.array_equal(np.asarray(y1), np.asarray(y3))
+    # 0.3 is not on the grid: stochastic rounding must dither BOTH
+    # neighbors and average out to ~x (unbiasedness)
+    body = np.asarray(y1)[1:]
+    assert len(np.unique(body)) == 2
+    assert abs(body.mean() - 0.3) < 1e-3
+
+
+def test_stochastic_encode_without_key_raises():
+    with pytest.raises(ValueError, match="stochastic"):
+        get_codec("int8").encode(jnp.ones((4, 4)))
+
+
+def test_topk_keeps_largest_and_zeroes_rest():
+    c = get_codec("topk")
+    x = jnp.asarray(np.random.RandomState(0).randn(3, 100).astype(np.float32))
+    y = np.asarray(c.roundtrip(x))
+    k = max(1, int(round(c.ratio * 100)))
+    for r in range(3):
+        kept = np.nonzero(y[r])[0]
+        assert len(kept) == k
+        # the kept entries are exactly the top-k by magnitude, unchanged
+        top = np.argsort(-np.abs(np.asarray(x[r])))[:k]
+        assert set(kept) == set(top)
+        np.testing.assert_array_equal(y[r][kept], np.asarray(x[r])[kept])
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel vs reference (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", ["int8", "fp8"])
+@pytest.mark.parametrize("stochastic", [True, False])
+@pytest.mark.parametrize("shape", [(8, 128), (16, 256), (37, 200), (3, 5)])
+def test_quantize_kernel_matches_reference_exactly(fmt, stochastic, shape):
+    """Same input + same random bits => the Pallas kernel (interpret mode)
+    and the pure-jnp oracle agree BITWISE, padded shapes included."""
+    x = jax.random.normal(jax.random.PRNGKey(2), shape, jnp.float32) * 2
+    bits = jax.random.bits(jax.random.PRNGKey(3), shape, jnp.uint32)
+    qa, sa = qk.quantize_2d(x, bits, fmt=fmt, stochastic=stochastic)
+    qb, sb = ref.quantize_2d(x, bits, fmt=fmt, stochastic=stochastic)
+    np.testing.assert_array_equal(np.asarray(qa, np.float32),
+                                  np.asarray(qb, np.float32))
+    np.testing.assert_array_equal(np.asarray(sa), np.asarray(sb))
+    # and under jit (the codec path inside the round step)
+    qj, sj = jax.jit(lambda a, b: qk.quantize_2d(
+        a, b, fmt=fmt, stochastic=stochastic))(x, bits)
+    np.testing.assert_array_equal(np.asarray(qj, np.float32),
+                                  np.asarray(qb, np.float32))
+    np.testing.assert_array_equal(np.asarray(sj), np.asarray(sb))
+
+
+def test_per_tile_scales_localize_outliers():
+    """One huge outlier must only coarsen its OWN tile's grid — per-tile
+    scales are the point of the kernel."""
+    x = np.full((16, 256), 0.5, np.float32)
+    x[0, 0] = 1000.0
+    bits = jnp.zeros((16, 256), jnp.uint32)
+    q, scales = qk.quantize_2d(jnp.asarray(x), bits, fmt="int8",
+                               stochastic=False)
+    y = np.asarray(qk.dequantize_2d(q, scales))
+    # the outlier tile (rows 0-7, cols 0-127) quantizes 0.5 to 0
+    assert abs(y[1, 1] - 0.5) > 0.4
+    # every other tile keeps 0.5 to int8 precision
+    assert abs(y[1, 200] - 0.5) < 0.01 and abs(y[9, 1] - 0.5) < 0.01
+
+
+# ---------------------------------------------------------------------------
+# Wire-level accounting through the live trainers (acceptance check)
+# ---------------------------------------------------------------------------
+
+
+def _metered_run(bundle, fed, fsl, cm, rounds=3):
+    tr = Trainer(bundle, fsl, donate=False)
+    meter = CommMeter()
+    tr.run(tr.init(0), FederatedBatcher(fed, 8, fsl.h, seed=0), rounds,
+           meter=meter, cost_model=cm)
+    return tr, meter
+
+
+@pytest.mark.parametrize("method", ["cse_fsl", "fsl_mc"])
+def test_int8_uplink_meter_is_4x_smaller_and_exact(method):
+    """The acceptance criterion: CommMeter's int8 uplink totals are ~4x
+    below fp32 on the same run, and EXACT per Codec.wire_bytes."""
+    n, h, rounds = 2, 2, 3
+    bundle, fed = _setup(n=n)
+    pa = jax.eval_shape(bundle.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    from repro.common import bytes_of
+    cm = CostModel(n=n, q=bundle.smashed_bytes_per_sample, d_local=120,
+                   w_client=bytes_of(pa["client"]),
+                   w_server=bytes_of(pa["server"]), aux=bytes_of(pa["aux"]))
+
+    fsl32 = FSLConfig(num_clients=n, h=h, lr=0.05, method=method)
+    fsl8 = FSLConfig(num_clients=n, h=h, lr=0.05, method=method,
+                     codec="int8")
+    tr32, m32 = _metered_run(bundle, fed, fsl32, cm, rounds)
+    tr8, m8 = _metered_run(bundle, fed, fsl8, cm, rounds)
+
+    # exactness: the metered uplink equals rounds x n x uploads x the
+    # codec's wire_bytes over the per-upload payload spec
+    batch = FederatedBatcher(fed, 8, h, seed=0).next_round()
+    up_spec, _ = tr8.method.payload_specs(bundle, fsl8, batch)
+    uploads = h if get_method(method).uploads_every_batch else 1
+    per_upload = tr8.transport.uplink_wire_bytes(up_spec)
+    assert m8.counts["uplink_smashed"] == rounds * n * uploads * per_upload
+
+    # ~4x: int8 payload is exactly 1/4 of fp32; the per-tile scale side
+    # channel adds a hair on top
+    ratio = m32.counts["uplink_smashed"] / m8.counts["uplink_smashed"]
+    assert 3.5 < ratio <= 4.0, ratio
+    # labels and model sync are codec-independent
+    assert m8.counts["uplink_labels"] == m32.counts["uplink_labels"]
+    assert m8.counts["model_sync"] == m32.counts["model_sync"]
+    # blocking methods still download fp32 gradients unless a downlink
+    # codec is configured
+    assert m8.counts["downlink_grads"] == m32.counts["downlink_grads"]
+
+
+def test_downlink_codec_compresses_gradient_replies():
+    """An explicit Transport with a downlink codec shrinks the metered
+    gradient downlink of a blocking method."""
+    n, h, rounds = 2, 1, 2
+    bundle, fed = _setup(n=n)
+    pa = jax.eval_shape(bundle.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    from repro.common import bytes_of
+    cm = CostModel(n=n, q=bundle.smashed_bytes_per_sample, d_local=120,
+                   w_client=bytes_of(pa["client"]),
+                   w_server=bytes_of(pa["server"]), aux=bytes_of(pa["aux"]))
+    fsl = FSLConfig(num_clients=n, h=h, lr=0.05, method="fsl_oc",
+                    grad_clip=1.0)
+    tp = make_transport("int8", downlink="fp8")
+    tr = Trainer(bundle, fsl, donate=False, transport=tp)
+    meter = CommMeter()
+    tr.run(tr.init(0), FederatedBatcher(fed, 8, h, seed=0), rounds,
+           meter=meter, cost_model=cm)
+    raw = Trainer(bundle, fsl, donate=False)
+    m_raw = CommMeter()
+    raw.run(raw.init(0), FederatedBatcher(fed, 8, h, seed=0), rounds,
+            meter=m_raw, cost_model=cm)
+    assert 0 < meter.counts["downlink_grads"] \
+        < m_raw.counts["downlink_grads"] / 3.5
+
+
+def test_int8_zero_latency_async_matches_sync():
+    """The cross-engine key invariant: sync assembly and async engine
+    derive stochastic codec keys from ONE Transport.unit_key, so a
+    zero-latency async int8 run lands on the sync int8 trajectory (same
+    quantization noise; fp-tol for vmap vs per-slice execution).  If the
+    key salting drifted between engines the dither would differ by ~1 LSB
+    per element and this comparison would blow past the tolerance."""
+    from repro.core.async_trainer import AsyncTrainer, ConstantLatency
+
+    n, h, rounds = 2, 2, 3
+    bundle, fed = _setup(n=n)
+    fsl = FSLConfig(num_clients=n, h=h, lr=0.05, codec="int8")
+    sync = Trainer(bundle, fsl, donate=False)
+    s_sync, _ = sync.run(sync.init(0), FederatedBatcher(fed, 8, h, seed=0),
+                         rounds)
+    asyn = AsyncTrainer(bundle, fsl, latency=ConstantLatency(0.0, 0.0, 0.0))
+    s_async, _ = asyn.run(asyn.init(0), FederatedBatcher(fed, 8, h, seed=0),
+                          rounds)
+    for a, b in zip(jax.tree_util.tree_leaves(s_sync),
+                    jax.tree_util.tree_leaves(s_async)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("codec", ["int8", "fp8", "topk"])
+def test_coded_training_stays_finite_all_methods(codec):
+    """Every codec trains every method for a couple of rounds without
+    NaNs through BOTH engines (smoke)."""
+    from repro.core.async_trainer import AsyncTrainer, ConstantLatency
+    n, h = 2, 2
+    bundle, fed = _setup(n=n)
+    for method in ("cse_fsl", "fsl_mc", "fsl_oc", "fsl_an"):
+        fsl = FSLConfig(num_clients=n, h=h, lr=0.05, method=method,
+                        codec=codec,
+                        grad_clip=1.0 if method == "fsl_oc" else 0.0)
+        tr = Trainer(bundle, fsl, donate=False)
+        _, hist = tr.run(tr.init(0), FederatedBatcher(fed, 8, h, seed=0), 2,
+                         log_every=1)
+        at = AsyncTrainer(bundle, fsl, latency=ConstantLatency())
+        _, ahist = at.run(at.init(0), FederatedBatcher(fed, 8, h, seed=0), 2,
+                          log_every=1)
+        for row in hist + ahist:
+            for k, v in row.items():
+                if k != "round":
+                    assert np.isfinite(v), (codec, method, row)
