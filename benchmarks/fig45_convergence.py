@@ -54,7 +54,10 @@ def run_method(bundle, fed, test, method: str, h: int, rounds: int, lr=0.15,
         curve.append({"round": rnd, "acc": acc,
                       "loss": m.get("client_loss", m.get("loss"))})
 
-    trainer.run(state, batcher, rounds, log_every=6, callback=record)
+    # compiled chunk runner, chunk == log cadence so `record` sees the
+    # exact state of each logged round (bitwise-identical to Trainer.run)
+    trainer.run_compiled(state, batcher, rounds, chunk=6, log_every=6,
+                         callback=record)
     return curve
 
 

@@ -42,7 +42,7 @@ def run_variant(base_cfg, aux_kind: str, channels: int, h: int,
     trainer = Trainer(bundle, fsl, donate=False)
     state = trainer.init(seed)
     batcher = FederatedBatcher(fed, 20, h, seed=seed)
-    state, _ = trainer.run(state, batcher, rounds)
+    state, _ = trainer.run_compiled(state, batcher, rounds, chunk=rounds)
     merged = trainer.merged_params(state)
     return accuracy(cfg, merged, xt, yt), count_params(merged["aux"])
 

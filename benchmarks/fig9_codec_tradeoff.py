@@ -62,9 +62,14 @@ def run_one(bundle, fed, test, cm, method: str, h: int, codec: str,
                       "wire_bytes": meter.total,
                       "acc": accuracy(trainer.merged_params(state), *test)})
 
-    trainer.run(trainer.init(seed), FederatedBatcher(fed, BS, h, seed=seed),
-                rounds, log_every=max(rounds // 3, 1), callback=record,
-                meter=meter, cost_model=cm)
+    # compiled chunks aligned to the log cadence: `record` reads accuracy
+    # off the exact state of each logged round (run_compiled is bitwise
+    # Trainer.run, so the metered curves are unchanged)
+    cadence = max(rounds // 3, 1)
+    trainer.run_compiled(trainer.init(seed),
+                         FederatedBatcher(fed, BS, h, seed=seed), rounds,
+                         chunk=cadence, log_every=cadence, callback=record,
+                         meter=meter, cost_model=cm)
     return curve
 
 

@@ -1,0 +1,153 @@
+"""Throughput benchmark: per-round Python loop vs compiled chunk runner.
+
+The repo's perf trajectory starts here.  For each method this measures,
+on the same data stream and seeds:
+
+  - ``compile_s``       first-dispatch time (trace + XLA compile) of each
+                        path;
+  - ``steps_per_s``     steady-state global rounds per second after the
+                        compile is paid, host loop included;
+  - ``dispatch_ms``     the estimated per-round host overhead the chunk
+                        runner removes: ``1/loop_sps - 1/compiled_sps``
+                        (both paths run identical XLA math — bitwise, see
+                        tests/test_compiled.py — so the residual is
+                        dispatch + per-round metric/cadence sync).
+
+The smoke CNN at h=1 is the regime the chunk runner targets (per-round
+compute is tiny, so host dispatch dominates); the acceptance bar asserted
+below is compiled >= 2x loop steps/s there.  Results land in
+``experiments/bench/BENCH_perf.json`` (CI uploads it per PR).
+
+  PYTHONPATH=src python -m benchmarks.perf_bench [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+
+from benchmarks.common import banner, save, table
+from repro.configs.base import FSLConfig
+from repro.core.bundle import cnn_bundle
+from repro.core.trainer import Trainer
+from repro.data import FederatedBatcher, partition_iid, \
+    synthetic_classification
+from repro.models.cnn import CIFAR10, CNNConfig
+
+METHODS = ("cse_fsl", "fsl_mc", "fsl_oc", "fsl_an")
+
+# Deliberately tiny: per-round device compute in the sub-ms band, so the
+# per-round dispatch/sync overhead of the Python loop is the bottleneck —
+# the regime paper-scale runs (thousands of cheap rounds) live in.  A
+# mid-size CNN rides along in the full sweep to show the gap narrowing as
+# compute grows.
+SMOKE = CNNConfig("smoke_cnn", (8, 8, 1), 10, conv_channels=(2, 2),
+                  kernel=3, server_widths=(8,), aux_channels=2, lrn=False)
+MID = CNNConfig("mid_cnn", (12, 12, 3), 10, conv_channels=(8, 8),
+                kernel=3, server_widths=(32,), aux_channels=8, lrn=False)
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(out)
+    return out, time.perf_counter() - t0
+
+
+def bench_one(cfg, method: str, h: int, rounds: int, chunk: int,
+              batch_size: int, n: int = 2, samples: int = 240, seed: int = 0):
+    bundle = cnn_bundle(cfg)
+    x, y = synthetic_classification(samples, cfg.in_shape, cfg.num_classes,
+                                    seed=seed, signal=12.0)
+    fed = partition_iid(x, y, n, seed=seed)
+    fsl = FSLConfig(num_clients=n, h=h, lr=0.05, method=method,
+                    grad_clip=1.0 if method == "fsl_oc" else 0.0)
+
+    def fresh():
+        tr = Trainer(bundle, fsl)       # donate=True: the production path
+        return tr, tr.init(seed), FederatedBatcher(fed, batch_size, h,
+                                                   seed=seed)
+
+    repeats = 3                 # best-of-N: shields steady-state numbers
+                                # from scheduler noise on shared hosts
+
+    # -- per-round Python loop (the reference) ------------------------------
+    tr, state, batcher = fresh()
+    (state, _), compile_loop = _timed(lambda: tr.run(state, batcher, 1))
+    t_loop = float("inf")
+    for _ in range(repeats):
+        (state, _), t = _timed(lambda: tr.run(state, batcher, rounds))
+        t_loop = min(t_loop, t)
+    loop_sps = rounds / t_loop
+
+    # -- compiled chunk runner ---------------------------------------------
+    tr, state, batcher = fresh()
+    (state, _), compile_chunk = _timed(
+        lambda: tr.run_compiled(state, batcher, chunk, chunk=chunk))
+    t_chunk = float("inf")
+    for _ in range(repeats):
+        (state, _), t = _timed(
+            lambda: tr.run_compiled(state, batcher, rounds, chunk=chunk))
+        t_chunk = min(t_chunk, t)
+    compiled_sps = rounds / t_chunk
+
+    return {
+        "arch": cfg.name, "method": method, "h": h, "rounds": rounds,
+        "chunk": chunk, "batch": batch_size,
+        "loop_steps_per_s": round(loop_sps, 2),
+        "compiled_steps_per_s": round(compiled_sps, 2),
+        "speedup": round(compiled_sps / loop_sps, 2),
+        "dispatch_ms_per_round": round(
+            (1.0 / loop_sps - 1.0 / compiled_sps) * 1e3, 3),
+        "compile_loop_s": round(compile_loop, 2),
+        "compile_chunk_s": round(compile_chunk, 2),
+    }
+
+
+def main(smoke: bool = False):
+    rounds, chunk = (80, 20) if smoke else (160, 40)
+    rows = []
+    for method in METHODS:
+        rows.append(bench_one(SMOKE, method, h=1, rounds=rounds, chunk=chunk,
+                              batch_size=2))
+    if not smoke:
+        # the h-lever (CSE trains h batches per dispatch) and bigger CNNs,
+        # where compute narrows the dispatch gap
+        rows.append(bench_one(SMOKE, "cse_fsl", h=5, rounds=rounds // 2,
+                              chunk=chunk // 2, batch_size=2))
+        rows.append(bench_one(MID, "cse_fsl", h=1, rounds=60, chunk=20,
+                              batch_size=4))
+        rows.append(bench_one(CIFAR10, "cse_fsl", h=1, rounds=30, chunk=10,
+                              batch_size=16))
+
+    banner("perf_bench — per-round loop vs compiled chunk runner "
+           f"({'smoke' if smoke else 'full'})")
+    table(rows, ["arch", "method", "h", "loop_steps_per_s",
+                 "compiled_steps_per_s", "speedup", "dispatch_ms_per_round",
+                 "compile_chunk_s"])
+
+    # Acceptance: where dispatch dominates (smoke CNN, h=1) the compiled
+    # runner must at least double throughput.  REPRO_PERF_MIN_SPEEDUP
+    # overrides the bar — CI runs on noisy shared runners and sets a
+    # slightly lower gate to stay flake-free; the measured numbers land in
+    # the artifact either way.
+    min_speedup = float(os.environ.get("REPRO_PERF_MIN_SPEEDUP", "2.0"))
+    for r in rows:
+        if r["arch"] == SMOKE.name and r["h"] == 1:
+            assert r["speedup"] >= min_speedup, r
+
+    payload = {"rows": rows,
+               "backend": jax.default_backend(),
+               "device_count": jax.device_count()}
+    path = save("BENCH_perf", payload)
+    print(f"\nwrote {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="smoke CNN only, fewer rounds — the CI guard")
+    main(**vars(ap.parse_args()))

@@ -55,8 +55,8 @@ def main():
         state = trainer.init()
         batcher = FederatedBatcher(fed, BS, h, seed=0)
         meter = CommMeter()
-        state, _ = trainer.run(state, batcher, ROUNDS, meter=meter,
-                               cost_model=cm)
+        state, _ = trainer.run_compiled(state, batcher, ROUNDS, chunk=ROUNDS,
+                                        meter=meter, cost_model=cm)
         acc = accuracy(trainer.merged_params(state), xt, yt)
         profile = trainer.comm_profile(cm, BS)
         label = f"cse_fsl_h{h}" if method == "cse_fsl" else method

@@ -237,6 +237,59 @@ def assemble_round_step(hooks: AsyncHooks, fsl: FSLConfig,
 
 
 # ---------------------------------------------------------------------------
+# Compiled multi-round execution: R rounds fused into one scanned program
+# ---------------------------------------------------------------------------
+
+
+def make_chunk_step(round_step, aggregate, fsl: FSLConfig,
+                    unit_batches: int):
+    """Fuse a whole chunk of global rounds into one scannable program.
+
+    ``Trainer.run`` dispatches one jitted ``round_step`` per round from the
+    host, syncing metrics and the aggregation cadence every round — at
+    paper scale the dispatch round-trips dwarf the per-round compute.  This
+    assembler lowers the host loop itself into XLA: a ``lax.scan`` over a
+    stacked ``[R, n, h, B, ...]`` batch chunk whose carry is the state, with
+    the :class:`repro.core.trainer.AggregationCadence` threshold math
+    computed in-carry from the ``state["round"]`` counter — ``lax.cond`` on
+    the crossing picks ``aggregate`` per step, so non-divisible schedules
+    (h=3, C=2) stay exact — and per-round metrics plus the ``aggregated``
+    flags stacked into device arrays the host fetches once per chunk.
+
+    ``unit_batches`` maps the round counter to per-client mini-batches
+    (``fsl.h`` for h-periodic methods whose counter advances once per
+    round, 1 for per-batch methods whose counter advances per inner unit)
+    — the same inversion :meth:`FSLMethod.batches_trained` applies, so a
+    chunk resumed from any checkpointed round keeps the paper's C-batch
+    schedule.  The lr schedule is staged as a per-round ``lrs`` operand
+    (computed host-side in double precision exactly like ``Trainer.lr_at``,
+    then scanned over) so the compiled chunk is *bitwise* identical to the
+    Python loop, not merely close.
+
+    ``aggregate`` must be structure-preserving (both ``lax.cond`` branches
+    return the same state pytree) — true of every registered method's
+    FedAvg.  Returns ``chunk_step(state, batches, lrs) -> (state,
+    stacked_metrics, agg_mask)``.
+    """
+    agg_every = fsl.resolved_agg_every
+
+    def chunk_step(state, batches, lrs):
+        def body(st, xs):
+            batch, lr = xs
+            prev = st["round"] * unit_batches
+            st, metrics = round_step(st, batch, lr)
+            done = st["round"] * unit_batches
+            aggregated = (done // agg_every) > (prev // agg_every)
+            st = lax.cond(aggregated, aggregate, lambda s: s, st)
+            return st, (metrics, aggregated)
+
+        state, (metrics, agg_mask) = lax.scan(body, state, (batches, lrs))
+        return state, metrics, agg_mask
+
+    return chunk_step
+
+
+# ---------------------------------------------------------------------------
 # The method interface
 # ---------------------------------------------------------------------------
 
@@ -272,6 +325,21 @@ class FSLMethod:
                                    server_constraint=server_constraint,
                                    transport=transport)
 
+    def make_chunk_step(self, bundle: SplitModelBundle, fsl: FSLConfig,
+                        server_constraint: Optional[Callable] = None,
+                        transport=None):
+        """Returns ``chunk_step(state, batches, lrs) -> (state, metrics,
+        agg_mask)`` fusing a whole chunk of rounds (stacked on a new
+        leading axis) into one scanned program — see :func:`make_chunk_step`.
+        Composes with per-method ``make_round_step`` overrides (e.g.
+        CSE-FSL's fused batched server update) automatically, since the
+        scanned body IS the method's round step."""
+        round_step = self.make_round_step(bundle, fsl,
+                                          server_constraint=server_constraint,
+                                          transport=transport)
+        return make_chunk_step(round_step, self.make_aggregate(), fsl,
+                               self.unit_batches(fsl))
+
     def make_aggregate(self):
         raise NotImplementedError
 
@@ -287,14 +355,20 @@ class FSLMethod:
         raise NotImplementedError(
             f"method {self.name!r} defines no async decomposition")
 
+    def unit_batches(self, fsl: FSLConfig) -> int:
+        """Per-client mini-batches covered by ONE increment of the
+        ``state["round"]`` counter.  Per-batch methods advance the counter
+        once per inner upload unit (1), CSE-FSL once per global round of
+        ``h`` batches (h).  Both :meth:`batches_trained` and the compiled
+        chunk cadence derive from this single multiplier."""
+        return 1 if self.uploads_every_batch else fsl.h
+
     def batches_trained(self, fsl: FSLConfig, state) -> int:
         """Local mini-batches each client has trained so far, recovered
-        from ``state["round"]``.  Per-batch methods advance the counter
-        once per inner upload unit, CSE-FSL once per
-        global round of ``h`` batches — this inverts that, so a resumed
-        ``Trainer.run`` keeps the paper's C-batch aggregation schedule."""
-        r = int(state["round"])
-        return r if self.uploads_every_batch else r * fsl.h
+        from ``state["round"]`` via :meth:`unit_batches` — so a resumed
+        ``Trainer.run``/``run_compiled`` keeps the paper's C-batch
+        aggregation schedule (and its lr schedule)."""
+        return int(state["round"]) * self.unit_batches(fsl)
 
     # -- accounting --------------------------------------------------------
     def payload_specs(self, bundle: SplitModelBundle, fsl: FSLConfig,

@@ -23,6 +23,15 @@ batched gradient cannot be expressed as event-triggered consumption).
 Clients are *stacked* on a leading ``num_clients`` axis (sharded over the
 ("pod","data") mesh axes in the distributed launcher); between aggregations
 the stacked slices genuinely diverge, exactly like real clients.
+
+Chunked execution (``Trainer.run_compiled``): the state layout is
+donation-safe (every leaf is a device array — the ``round`` counter is a
+traced int32, never a Python int) and ``make_aggregate`` is
+structure-preserving, so rounds scan under ``lax.scan`` with the cadence's
+``lax.cond`` picking FedAvg in-carry.  The fused ``server_update="batched"``
+override composes automatically: the chunk assembler scans whatever
+``make_round_step`` returns.  The counter advances once per h-batch round
+(``unit_batches = h``).
 """
 from __future__ import annotations
 

@@ -5,6 +5,11 @@ The sync round step is assembled from the hooks below: per mini-batch the
 client takes its local aux-loss step, uploads the smashed batch computed
 with the *updated* client model, and the client's own server replica
 consumes it — non-blocking, no reply crosses the wire.
+
+Chunked execution (``Trainer.run_compiled``): all-array state
+(donation-safe) and a dual (clients + server replicas)
+structure-preserving FedAvg for the in-carry ``lax.cond``; the counter
+advances per mini-batch (``unit_batches = 1``).
 """
 from __future__ import annotations
 

@@ -9,6 +9,11 @@ end-to-end gradient of the fused implementation split by the chain rule.
 Note the decomposed path is wire-faithful: for MoE architectures the
 client-side load-balance regularizer term does not cross the cut and is
 (as on a real link) not part of the downloaded gradient.
+
+Chunked execution (``Trainer.run_compiled``): state (stacked clients +
+stacked server replicas) is all device arrays — donation-safe — and the
+dual FedAvg aggregate is structure-preserving for the in-carry ``lax.cond``.
+The round counter advances per mini-batch (``unit_batches = 1``).
 """
 from __future__ import annotations
 

@@ -6,6 +6,11 @@ clients forward in parallel, the ONE shared server consumes the uploads
 sequentially in (zero-latency) arrival order emitting each cut gradient,
 and the clients back-propagate the replies in parallel — the
 straggler-amplifying per-batch round trips CSE-FSL removes.
+
+Chunked execution (``Trainer.run_compiled``): all-array state
+(donation-safe) and a clients-only structure-preserving FedAvg for the
+in-carry ``lax.cond``; the counter advances per mini-batch
+(``unit_batches = 1``).
 """
 from __future__ import annotations
 

@@ -11,6 +11,11 @@ per-method branching in the drivers).
   state, history = trainer.run(state, batcher, num_rounds=50,
                                log_every=10, meter=CommMeter(), cost_model=cm)
 
+``run`` is the per-round reference loop (one jitted dispatch per round);
+``run_compiled(..., chunk=R)`` fuses R rounds into one donated
+``lax.scan`` program and is bitwise-identical to it — use it whenever the
+host loop, not the math, is the bottleneck (see README "Performance").
+
 ``batcher.next_round()`` must yield ``(inputs, labels)`` pytrees with
 leading dims ``[n_clients, h, B, ...]`` — the unified batch contract all
 methods consume.
@@ -21,11 +26,22 @@ import dataclasses
 from typing import Any, Callable, Optional, Union
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import FSLConfig
 from repro.core.accounting import CommMeter, CostModel
 from repro.core.bundle import SplitModelBundle
 from repro.core.methods import CommProfile, FSLMethod, get_method
+
+
+def _stack_rounds(*xs):
+    """Stack one leaf across a chunk of rounds.  Host arrays stack on the
+    host first (one device transfer per leaf, not R), device arrays stack
+    on device."""
+    if all(isinstance(x, np.ndarray) for x in xs):
+        return jnp.asarray(np.stack(xs))
+    return jnp.stack([jnp.asarray(x) for x in xs])
 
 
 class AggregationCadence:
@@ -79,6 +95,15 @@ class Trainer:
                               transport=self.transport),
             donate_argnums=donate)
         self.agg_fn = jax.jit(m.make_aggregate(), donate_argnums=donate)
+        # The compiled multi-round runner (run_compiled): R rounds fused
+        # into one donated lax.scan program.  jit caches per chunk length,
+        # so a trailing partial chunk costs one extra compile, not one per
+        # call.
+        self.chunk_fn = jax.jit(
+            m.make_chunk_step(self.bundle, self.fsl,
+                              server_constraint=self.server_constraint,
+                              transport=self.transport),
+            donate_argnums=donate)
 
     # -- public per-round API (custom loops, e.g. arrival-order studies) ----
     def init(self, seed: int = 0):
@@ -115,6 +140,29 @@ class Trainer:
                                         transport=self.transport,
                                         payload_specs=specs)
 
+    # -- shared per-round bookkeeping (run and run_compiled MUST log
+    # identically — the bitwise-history contract in tests/test_compiled.py
+    # rides on this being one code path) -----------------------------------
+    def _log_round(self, rnd, rnd0, aggregated, metrics_fn, profile, meter,
+                   log_every, callback, history, state):
+        """Meter + history row for one finished (post-aggregation) round.
+        ``metrics_fn`` lazily yields the float-cast metrics dict so the
+        per-round loop only fetches device scalars on logged rounds."""
+        if profile is not None:
+            meter.log("uplink_smashed", profile.wire_uplink_smashed)
+            meter.log("uplink_labels", profile.uplink_labels)
+            meter.log("downlink_grads", profile.wire_downlink_grads)
+            if aggregated:
+                meter.log("model_sync", profile.model_sync)
+        if log_every and (rnd + 1 - rnd0) % log_every == 0:
+            m = metrics_fn()
+            row: dict = {"round": rnd + 1, **m, "aggregated": aggregated}
+            if meter is not None:
+                row["comm_bytes"] = meter.total
+            history.append(row)
+            if callback:
+                callback(rnd + 1, m, state)
+
     # -- the loop -----------------------------------------------------------
     def run(self, state, batcher, num_rounds: int, log_every: int = 0,
             callback=None, meter: Optional[CommMeter] = None,
@@ -146,21 +194,76 @@ class Trainer:
                 profile = self.comm_profile(cost_model, batch_size,
                                             batch=batch)
             state, metrics = self.step_fn(state, batch, self.lr_at(rnd))
-            if profile is not None:
-                meter.log("uplink_smashed", profile.wire_uplink_smashed)
-                meter.log("uplink_labels", profile.uplink_labels)
-                meter.log("downlink_grads", profile.wire_downlink_grads)
             aggregated = cadence.advance(self.fsl.h)
             if aggregated:
                 state = self.agg_fn(state)
-                if profile is not None:
-                    meter.log("model_sync", profile.model_sync)
-            if log_every and (rnd + 1 - rnd0) % log_every == 0:
-                m = {k: float(v) for k, v in metrics.items()}
-                row: dict = {"round": rnd + 1, **m, "aggregated": aggregated}
-                if meter is not None:
-                    row["comm_bytes"] = meter.total
-                history.append(row)
-                if callback:
-                    callback(rnd + 1, m, state)
+            self._log_round(rnd, rnd0, aggregated,
+                            lambda: {k: float(v) for k, v in metrics.items()},
+                            profile, meter, log_every, callback, history,
+                            state)
+        return state, history
+
+    # -- the compiled loop --------------------------------------------------
+    def run_compiled(self, state, batcher, num_rounds: int, chunk: int = 16,
+                     log_every: int = 0, callback=None,
+                     meter: Optional[CommMeter] = None,
+                     cost_model: Optional[CostModel] = None):
+        """Run ``num_rounds`` global rounds, ``chunk`` rounds per XLA
+        dispatch — bitwise-identical to :meth:`run` (state AND history),
+        as fast as the hardware allows.
+
+        Each chunk stages ``R = min(chunk, remaining)`` rounds of batches
+        on a new leading axis and hands them to one jitted
+        ``lax.scan``-driven program with buffer donation (see
+        :func:`repro.core.methods.base.make_chunk_step`): the aggregation
+        cadence runs in the scan carry, the lr schedule is staged per
+        chunk, and per-round metrics + ``aggregated`` flags come back as
+        stacked device arrays fetched once.  ``CommMeter`` totals and
+        history rows are reconstructed host-side from the static
+        CommProfile and the returned aggregation mask — no per-round
+        ``meter.log`` sync.
+
+        Differences from :meth:`run` worth knowing:
+        - donation: with ``donate=True`` (the default) the previous
+          chunk's state buffers are consumed — keep no references to
+          intermediate states across calls;
+        - ``callback(rnd, metrics, state)`` fires on the ``log_every``
+          cadence with that round's metrics but the *chunk-final* state
+          (mid-chunk states are never materialized on the host).  Pass
+          ``chunk=log_every`` when the callback inspects state (e.g.
+          accuracy eval) — then every callback sees its exact round state;
+        - resume: like :meth:`run`, both the cadence and the lr schedule
+          restart from ``state["round"]``, so a checkpoint taken at ANY
+          round — chunk-aligned or not — continues the paper's schedule.
+        """
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk} "
+                             "(use Trainer.run for the per-round loop)")
+        start_batches = self.method.batches_trained(self.fsl, state)
+        rnd0 = start_batches // self.fsl.h
+        history = []
+        profile = None
+        done = 0
+        while done < num_rounds:
+            r = min(chunk, num_rounds - done)
+            rounds = [batcher.next_round() for _ in range(r)]
+            if meter is not None and cost_model is not None \
+                    and profile is None:
+                batch_size = jax.tree_util.tree_leaves(
+                    rounds[0][1])[0].shape[2]
+                profile = self.comm_profile(cost_model, batch_size,
+                                            batch=rounds[0])
+            batches = jax.tree_util.tree_map(_stack_rounds, *rounds)
+            lrs = jnp.asarray([self.lr_at(rnd0 + done + i) for i in range(r)],
+                              jnp.float32)
+            state, metrics, agg_mask = self.chunk_fn(state, batches, lrs)
+            # ONE host fetch per chunk: the stacked metrics + agg mask
+            agg_mask = np.asarray(agg_mask)
+            metrics = {k: np.asarray(v) for k, v in metrics.items()}
+            for i in range(r):
+                self._log_round(
+                    rnd0 + done + i, rnd0, bool(agg_mask[i]),
+                    lambda: {k: float(v[i]) for k, v in metrics.items()},
+                    profile, meter, log_every, callback, history, state)
+            done += r
         return state, history

@@ -9,11 +9,20 @@ tile) and keeps the quantization error proportional to the *local* range.
 
 Stochastic rounding makes the quantizer unbiased (E[decode(encode(x))]=x),
 which matters because the server *trains* on the decoded activations:
-biased rounding accumulates over thousands of optimizer steps.  The random
-bits are supplied by the caller (``jax.random.bits``) instead of the
-in-kernel TPU PRNG so the same kernel runs bit-identically under
-``interpret=True`` on CPU — `kernels/ref.py` holds the matching pure-jnp
-oracle the tests compare against exactly.
+biased rounding accumulates over thousands of optimizer steps.  Two
+randomness paths share one rounding math:
+
+  - **caller bits** (CPU / ``interpret=True``): a uint32 ``[R, C]`` tensor
+    from ``jax.random.bits`` — bit-identical to the pure-jnp oracle in
+    `kernels/ref.py`, which the tests compare against exactly;
+  - **in-kernel PRNG** (real TPU): a scalar-prefetched seed drives
+    ``pltpu.prng_seed(seed, i, j)`` + ``pltpu.prng_random_bits`` per tile,
+    so no payload-sized uint32 tensor is ever materialized — inside the
+    compiled chunk scan (``Trainer.run_compiled``) the random bits live
+    only in VMEM for the lifetime of one tile.
+
+``use_inkernel_prng()`` tells the transport codecs which path the current
+backend takes.
 
 Formats:
   - ``int8``: round(x/scale) to [-127, 127], scale = tile absmax / 127.
@@ -56,8 +65,10 @@ def _stochastic_fp8(y, bits):
     return jnp.clip(y, -FP8_MAX, FP8_MAX)
 
 
-def _quant_kernel(x_ref, bits_ref, q_ref, s_ref, *, fmt: str,
-                  stochastic: bool):
+def _quant_tile(x_ref, q_ref, s_ref, bits, *, fmt: str, stochastic: bool):
+    """One tile's quantization math — shared verbatim by the caller-bits
+    and in-kernel-PRNG kernels so the two paths differ ONLY in where the
+    random bits come from."""
     x = x_ref[...].astype(jnp.float32)
     qmax = INT8_MAX if fmt == "int8" else FP8_MAX
     # multiply by the precomputed reciprocal: XLA rewrites division by a
@@ -68,27 +79,55 @@ def _quant_kernel(x_ref, bits_ref, q_ref, s_ref, *, fmt: str,
     s_ref[...] = jnp.full(s_ref.shape, scale, jnp.float32)
     y = x / scale
     if fmt == "int8":
-        q = _stochastic_int8(y, bits_ref[...]) if stochastic else jnp.round(y)
+        q = _stochastic_int8(y, bits) if stochastic else jnp.round(y)
         q_ref[...] = jnp.clip(q, -INT8_MAX, INT8_MAX).astype(jnp.int8)
     else:
-        y = _stochastic_fp8(y, bits_ref[...]) if stochastic \
+        y = _stochastic_fp8(y, bits) if stochastic \
             else jnp.clip(y, -FP8_MAX, FP8_MAX)
         q_ref[...] = y.astype(jnp.float8_e4m3fn)
+
+
+def _quant_kernel(x_ref, bits_ref, q_ref, s_ref, *, fmt: str,
+                  stochastic: bool):
+    _quant_tile(x_ref, q_ref, s_ref, bits_ref[...], fmt=fmt,
+                stochastic=stochastic)
+
+
+def _quant_kernel_prng(seed_ref, x_ref, q_ref, s_ref, *, fmt: str):
+    """TPU-native stochastic path: the per-core PRNG is seeded from the
+    scalar-prefetched seed + the tile's grid coordinates, so every tile
+    draws an independent stream and no ``[R, C]`` bits tensor exists."""
+    from jax.experimental.pallas import tpu as pltpu
+    pltpu.prng_seed(seed_ref[0], pl.program_id(0), pl.program_id(1))
+    bits = pltpu.bitcast(pltpu.prng_random_bits(x_ref.shape), jnp.uint32)
+    _quant_tile(x_ref, q_ref, s_ref, bits, fmt=fmt, stochastic=True)
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def quantize_2d(x, bits, *, fmt: str = "int8", bt: int = 8, bc: int = 128,
-                stochastic: bool = True, interpret=None):
+def use_inkernel_prng() -> bool:
+    """True when quantize_2d should take the in-kernel PRNG path (real
+    TPU): callers pass a scalar ``seed`` instead of materializing a
+    payload-sized uint32 ``bits`` tensor.  Off-TPU the caller-bits path
+    keeps CPU tests bitwise against ``kernels/ref.py``."""
+    return not _interpret()
+
+
+def quantize_2d(x, bits=None, *, seed=None, fmt: str = "int8", bt: int = 8,
+                bc: int = 128, stochastic: bool = True, interpret=None):
     """Per-tile quantization of a [R, C] array.
 
     Returns ``(q, scales)``: ``q`` is [R, C] int8 (or float8_e4m3fn),
-    ``scales`` is [ceil(R/bt), ceil(C/bc)] fp32.  ``bits`` must be a
-    uint32 [R, C] array when ``stochastic`` (ignored otherwise — pass the
-    same array to keep one call signature).  Tiles are padded with zeros,
-    which cannot raise a tile's absmax.
+    ``scales`` is [ceil(R/bt), ceil(C/bc)] fp32.  Randomness, when
+    ``stochastic``: EITHER ``bits`` — a caller-supplied uint32 [R, C]
+    array (the interpret/CPU path, bitwise against ``kernels/ref.py``) —
+    OR ``seed`` — an int32 scalar driving the in-kernel TPU PRNG, which
+    never materializes the bits (real-TPU only; pick the path with
+    :func:`use_inkernel_prng`).  ``bits`` is ignored when not
+    ``stochastic``.  Tiles are padded with zeros, which cannot raise a
+    tile's absmax.
     """
     if interpret is None:
         interpret = _interpret()
@@ -96,10 +135,42 @@ def quantize_2d(x, bits, *, fmt: str = "int8", bt: int = 8, bc: int = 128,
     rp, cp = pl.cdiv(r, bt) * bt, pl.cdiv(c, bc) * bc
     if (rp, cp) != (r, c):
         x = jnp.pad(x, ((0, rp - r), (0, cp - c)))
-        bits = jnp.pad(bits, ((0, rp - r), (0, cp - c)))
+        if bits is not None:
+            bits = jnp.pad(bits, ((0, rp - r), (0, cp - c)))
     nr, nc = rp // bt, cp // bc
     out_dtype = jnp.int8 if fmt == "int8" else jnp.float8_e4m3fn
+    out_shape = [
+        jax.ShapeDtypeStruct((rp, cp), out_dtype),
+        jax.ShapeDtypeStruct((nr, nc), jnp.float32),
+    ]
 
+    if stochastic and seed is not None:
+        if interpret:
+            raise ValueError(
+                "the in-kernel PRNG path (seed=...) needs a real TPU; "
+                "pass caller bits under interpret=True")
+        from jax.experimental.pallas import tpu as pltpu
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nr, nc),
+            in_specs=[pl.BlockSpec((bt, bc), lambda i, j, s: (i, j))],
+            out_specs=[
+                pl.BlockSpec((bt, bc), lambda i, j, s: (i, j)),
+                pl.BlockSpec((1, 1), lambda i, j, s: (i, j)),
+            ],
+        )
+        q, scales = pl.pallas_call(
+            functools.partial(_quant_kernel_prng, fmt=fmt),
+            grid_spec=grid_spec,
+            out_shape=out_shape,
+        )(jnp.asarray(seed, jnp.int32).reshape(1), x)
+        return q[:r, :c], scales
+
+    if stochastic and bits is None:
+        raise ValueError("stochastic quantize_2d needs bits=<uint32 [R,C]> "
+                         "or seed=<int32 scalar>")
+    if bits is None:                        # rounding ignores the bits
+        bits = jnp.zeros((rp, cp), jnp.uint32)
     q, scales = pl.pallas_call(
         functools.partial(_quant_kernel, fmt=fmt, stochastic=stochastic),
         grid=(nr, nc),
@@ -111,10 +182,7 @@ def quantize_2d(x, bits, *, fmt: str = "int8", bt: int = 8, bc: int = 128,
             pl.BlockSpec((bt, bc), lambda i, j: (i, j)),
             pl.BlockSpec((1, 1), lambda i, j: (i, j)),
         ],
-        out_shape=[
-            jax.ShapeDtypeStruct((rp, cp), out_dtype),
-            jax.ShapeDtypeStruct((nr, nc), jnp.float32),
-        ],
+        out_shape=out_shape,
         interpret=interpret,
     )(x, bits.astype(jnp.uint32))
     return q[:r, :c], scales
@@ -123,7 +191,19 @@ def quantize_2d(x, bits, *, fmt: str = "int8", bt: int = 8, bc: int = 128,
 def dequantize_2d(q, scales, *, bt: int = 8, bc: int = 128,
                   dtype=jnp.float32):
     """Exact inverse map of ``quantize_2d``'s scaling (plain jnp: the
-    per-element multiply needs no kernel and matches on every backend)."""
+    per-element multiply needs no kernel and matches on every backend).
+
+    The scale map is applied by reshaping the payload into its
+    [nR, bt, nC, bc] tile view and broadcasting the [nR, nC] scales across
+    it — one fused multiply, no materialized [R, C] fp32 scale map (the
+    old double-``jnp.repeat`` built that map AND the product; elementwise
+    the result is bitwise-identical, asserted in tests/test_transport.py).
+    """
     r, c = q.shape
-    smap = jnp.repeat(jnp.repeat(scales, bt, axis=0)[:r], bc, axis=1)[:, :c]
-    return (q.astype(jnp.float32) * smap).astype(dtype)
+    nr, nc = scales.shape
+    rp, cp = nr * bt, nc * bc
+    if (rp, cp) != (r, c):                  # pad the (narrow) payload only
+        q = jnp.pad(q, ((0, rp - r), (0, cp - c)))
+    tiles = q.reshape(nr, bt, nc, bc).astype(jnp.float32)
+    y = (tiles * scales[:, None, :, None]).reshape(rp, cp)
+    return y[:r, :c].astype(dtype)

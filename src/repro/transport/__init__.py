@@ -140,9 +140,19 @@ class _QuantCodec(Codec):
             if key is None:
                 raise ValueError(f"codec {self.name!r} is stochastic; "
                                  "pass a PRNG key to encode()")
+            if qk.use_inkernel_prng():
+                # real TPU: a scalar seed drives the in-kernel PRNG — no
+                # payload-sized uint32 bits tensor inside the round/chunk
+                # scan (ROADMAP "TPU-native quantize path")
+                seed = (jax.random.bits(key, (), jnp.uint32) >> 1) \
+                    .astype(jnp.int32)
+                q, scales = qk.quantize_2d(
+                    x2, seed=seed, fmt=self.fmt, bt=self.bt, bc=self.bc,
+                    stochastic=True)
+                return {"q": q, "scale": scales}
             bits = jax.random.bits(key, (r, c), jnp.uint32)
         else:
-            bits = jnp.zeros((r, c), jnp.uint32)
+            bits = None
         q, scales = qk.quantize_2d(x2, bits, fmt=self.fmt, bt=self.bt,
                                    bc=self.bc, stochastic=self.stochastic)
         return {"q": q, "scale": scales}

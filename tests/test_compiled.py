@@ -1,0 +1,183 @@
+"""The compiled chunk runner: ``Trainer.run_compiled`` must be BITWISE
+identical to the per-round Python loop ``Trainer.run`` — final state pytree
+and history rows — across methods, cadences (including the non-divisible
+h=3/C=2 schedule), codecs, chunk sizes that don't divide the round count,
+CSE-FSL's fused batched server update, and resume from a checkpoint taken
+mid-chunk.  Plus the dequantize_2d reshape-broadcast exactness satellite.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FSLConfig
+from repro.core.accounting import CommMeter, CostModel
+from repro.core.bundle import cnn_bundle
+from repro.core.trainer import Trainer
+from repro.data import FederatedBatcher, partition_iid, \
+    synthetic_classification
+from repro.models.cnn import CIFAR10
+
+ALL_METHODS = ("cse_fsl", "fsl_mc", "fsl_oc", "fsl_an")
+
+
+def _setup(n=2, samples=240, seed=0):
+    bundle = cnn_bundle(CIFAR10)
+    x, y = synthetic_classification(samples, CIFAR10.in_shape, 10, seed=seed,
+                                    signal=12.0)
+    return bundle, partition_iid(x, y, n, seed=seed)
+
+
+def _cost_model(bundle):
+    from repro.common import bytes_of
+    pa = jax.eval_shape(bundle.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return CostModel(n=2, q=bundle.smashed_bytes_per_sample, d_local=120,
+                     w_client=bytes_of(pa["client"]),
+                     w_server=bytes_of(pa["server"]), aux=bytes_of(pa["aux"]))
+
+
+def _assert_states_bitwise(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _run_both(bundle, fed, fsl, rounds, chunk, metered=False, log_every=1):
+    """(state, history) from Trainer.run and run_compiled on identical
+    seeds/batch streams; meters attached when ``metered``."""
+    cm = _cost_model(bundle) if metered else None
+    out = []
+    for compiled in (False, True):
+        tr = Trainer(bundle, fsl, donate=False)
+        state = tr.init(0)
+        batcher = FederatedBatcher(fed, 8, fsl.h, seed=0)
+        meter = CommMeter() if metered else None
+        if compiled:
+            state, hist = tr.run_compiled(state, batcher, rounds,
+                                          chunk=chunk, log_every=log_every,
+                                          meter=meter, cost_model=cm)
+        else:
+            state, hist = tr.run(state, batcher, rounds,
+                                 log_every=log_every, meter=meter,
+                                 cost_model=cm)
+        out.append((state, hist, meter))
+    return out
+
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_run_compiled_bitwise_matches_run(method):
+    """Core acceptance: 5 rounds at chunk=2 (a trailing partial chunk) —
+    state AND metered history rows identical to the per-round loop."""
+    bundle, fed = _setup()
+    fsl = FSLConfig(num_clients=2, h=2, lr=0.05, method=method,
+                    grad_clip=1.0 if method == "fsl_oc" else 0.0)
+    (s_loop, h_loop, m_loop), (s_chunk, h_chunk, m_chunk) = _run_both(
+        bundle, fed, fsl, rounds=5, chunk=2, metered=True)
+    _assert_states_bitwise(s_loop, s_chunk)
+    assert h_loop == h_chunk
+    assert m_loop.counts == m_chunk.counts
+
+
+@pytest.mark.parametrize("method", ("cse_fsl", "fsl_an"))
+def test_run_compiled_h3_c2_cadence_exact(method):
+    """The non-divisible schedule: h=3, C=2 — a threshold crossing in
+    every round, realized by the in-carry lax.cond exactly as by the
+    host-side AggregationCadence (aggregated flags in history match)."""
+    bundle, fed = _setup()
+    fsl = FSLConfig(num_clients=2, h=3, agg_every=2, lr=0.05, method=method)
+    (s_loop, h_loop, _), (s_chunk, h_chunk, _) = _run_both(
+        bundle, fed, fsl, rounds=4, chunk=3)
+    _assert_states_bitwise(s_loop, s_chunk)
+    assert h_loop == h_chunk
+    assert any(row["aggregated"] for row in h_chunk)
+
+
+@pytest.mark.parametrize("codec", ("none", "int8"))
+@pytest.mark.parametrize("method", ("cse_fsl", "fsl_mc"))
+def test_run_compiled_codecs_bitwise(method, codec):
+    """Identity and int8 uplinks: the stochastic codec keys derive from
+    the in-state round counter (Transport.unit_key), so the quantization
+    dither inside the chunk scan reproduces the loop's bit for bit."""
+    bundle, fed = _setup()
+    fsl = FSLConfig(num_clients=2, h=2, lr=0.05, method=method, codec=codec)
+    (s_loop, h_loop, m_loop), (s_chunk, h_chunk, m_chunk) = _run_both(
+        bundle, fed, fsl, rounds=4, chunk=2, metered=True)
+    _assert_states_bitwise(s_loop, s_chunk)
+    assert h_loop == h_chunk
+    assert m_loop.counts == m_chunk.counts
+
+
+def test_run_compiled_batched_server_update_composes():
+    """CSE-FSL's fused sync-only override IS the scanned chunk body when
+    server_update='batched' — same bitwise contract."""
+    bundle, fed = _setup()
+    fsl = FSLConfig(num_clients=2, h=2, lr=0.05, server_update="batched")
+    (s_loop, h_loop, _), (s_chunk, h_chunk, _) = _run_both(
+        bundle, fed, fsl, rounds=3, chunk=2)
+    _assert_states_bitwise(s_loop, s_chunk)
+    assert h_loop == h_chunk
+
+
+def test_run_compiled_resume_mid_chunk(tmp_path):
+    """A checkpoint taken at a round that is NOT chunk-aligned (round 3,
+    chunk=4) resumes on the exact trajectory: cadence, lr schedule, and
+    weights all recovered from state['round']."""
+    from repro import checkpoint
+
+    bundle, fed = _setup()
+    fsl = FSLConfig(num_clients=2, h=3, agg_every=2, lr=0.05,
+                    lr_decay_every=2, lr_decay=0.9)
+    ref = Trainer(bundle, fsl, donate=False)
+    s_ref, _ = ref.run_compiled(ref.init(0),
+                                FederatedBatcher(fed, 8, fsl.h, seed=0), 6,
+                                chunk=4)
+
+    tr = Trainer(bundle, fsl, donate=False)
+    batcher = FederatedBatcher(fed, 8, fsl.h, seed=0)
+    state = tr.init(0)
+    state, _ = tr.run(state, batcher, 3)            # mid-chunk round count
+    path = str(tmp_path / "mid")
+    checkpoint.save(path, state, step=int(state["round"]))
+    restored = checkpoint.restore(path, jax.eval_shape(lambda: state))
+
+    s_resumed, _ = tr.run_compiled(restored, batcher, 3, chunk=4)
+    _assert_states_bitwise(s_ref, s_resumed)
+
+
+def test_run_compiled_callback_chunk_aligned_state():
+    """With chunk == log_every the callback's state IS the logged round's
+    state (the documented recipe for accuracy-eval callbacks)."""
+    bundle, fed = _setup()
+    fsl = FSLConfig(num_clients=2, h=2, lr=0.05)
+    seen = []
+
+    tr = Trainer(bundle, fsl, donate=False)
+    tr.run_compiled(tr.init(0), FederatedBatcher(fed, 8, 2, seed=0), 4,
+                    chunk=2, log_every=2,
+                    callback=lambda rnd, m, st: seen.append(
+                        (rnd, int(st["round"]))))
+    assert seen == [(2, 2), (4, 4)]
+
+
+# ---------------------------------------------------------------------------
+# dequantize_2d satellite: reshape-broadcast == the old double-repeat map
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(8, 128), (16, 256), (37, 200), (3, 5)])
+@pytest.mark.parametrize("fmt", ["int8", "fp8"])
+def test_dequantize_reshape_broadcast_matches_old_repeat_path(shape, fmt):
+    from repro.kernels import quantize as qk
+
+    bt, bc = 8, 128
+    x = jax.random.normal(jax.random.PRNGKey(0), shape, jnp.float32) * 2
+    bits = jax.random.bits(jax.random.PRNGKey(1), shape, jnp.uint32)
+    q, scales = qk.quantize_2d(x, bits, fmt=fmt)
+
+    got = qk.dequantize_2d(q, scales, bt=bt, bc=bc)
+    # the pre-refactor scale-map materialization, frozen here
+    r, c = q.shape
+    smap = jnp.repeat(jnp.repeat(scales, bt, axis=0)[:r], bc, axis=1)[:, :c]
+    want = (q.astype(jnp.float32) * smap).astype(jnp.float32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
