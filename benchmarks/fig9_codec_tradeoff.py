@@ -14,7 +14,13 @@ Validated claims (qualitative):
   - codecs compose with CSE-FSL's h-lever: cse_fsl+int8 is the cheapest
     uplink per unit accuracy of any (method, codec) pair swept here.
 
-  PYTHONPATH=src python -m benchmarks.fig9_codec_tradeoff [--smoke]
+  PYTHONPATH=src python -m benchmarks.fig9_codec_tradeoff \
+      [--smoke | --scale paper [--epochs 200]]
+
+``--scale paper`` reruns the sweep at the paper's Table V budget: 200
+F-EMNIST epochs per (method, h) — rounds = epochs * |D_i| / (B h) — via
+``Trainer.run_compiled`` (the host loop stopped being the bottleneck in
+PR 4, which is what makes this budget tractable at all).
 """
 from __future__ import annotations
 
@@ -32,7 +38,7 @@ from repro.core.trainer import Trainer
 from repro.data import FederatedBatcher, partition_iid, \
     synthetic_classification
 from repro.models import cnn as cnn_mod
-from repro.models.cnn import CIFAR10
+from repro.models.cnn import CIFAR10, FEMNIST
 
 ROUNDS = 10
 BS = 24
@@ -40,15 +46,21 @@ N_CLIENTS = 4
 CODECS = ("none", "int8", "fp8", "topk")
 METHODS = (("fsl_mc", 1), ("fsl_oc", 1), ("fsl_an", 1), ("cse_fsl", 5))
 
+# --scale paper: the Table V grid (hit CSE-FSL at both upload periods)
+PAPER_METHODS = (("fsl_mc", 1), ("fsl_oc", 1), ("fsl_an", 1),
+                 ("cse_fsl", 5), ("cse_fsl", 10))
+PAPER_BS = 20
+PAPER_D_LOCAL = 600             # F-EMNIST samples per client (per writer)
 
-def accuracy(params, x, y):
-    sm = cnn_mod.client_forward(CIFAR10, params["client"], jnp.asarray(x))
-    logits = cnn_mod.server_forward(CIFAR10, params["server"], sm)
+
+def accuracy(cfg, params, x, y):
+    sm = cnn_mod.client_forward(cfg, params["client"], jnp.asarray(x))
+    logits = cnn_mod.server_forward(cfg, params["server"], sm)
     return float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(y)))
 
 
-def run_one(bundle, fed, test, cm, method: str, h: int, codec: str,
-            rounds: int, lr=0.15, seed=0):
+def run_one(bundle, cfg, fed, test, cm, method: str, h: int, codec: str,
+            rounds: int, bs=BS, lr=0.15, seed=0):
     fsl = FSLConfig(num_clients=fed.num_clients, h=h, lr=lr, method=method,
                     codec=codec,
                     grad_clip=1.0 if method == "fsl_oc" else 0.0)
@@ -60,71 +72,104 @@ def run_one(bundle, fed, test, cm, method: str, h: int, codec: str,
         curve.append({"round": rnd,
                       "uplink_bytes": meter.counts["uplink_smashed"],
                       "wire_bytes": meter.total,
-                      "acc": accuracy(trainer.merged_params(state), *test)})
+                      "acc": accuracy(cfg, trainer.merged_params(state),
+                                      *test)})
 
     # compiled chunks aligned to the log cadence: `record` reads accuracy
     # off the exact state of each logged round (run_compiled is bitwise
     # Trainer.run, so the metered curves are unchanged)
     cadence = max(rounds // 3, 1)
     trainer.run_compiled(trainer.init(seed),
-                         FederatedBatcher(fed, BS, h, seed=seed), rounds,
+                         FederatedBatcher(fed, bs, h, seed=seed), rounds,
                          chunk=cadence, log_every=cadence, callback=record,
                          meter=meter, cost_model=cm)
     return curve
 
 
-def main(rounds: int = ROUNDS, codecs=CODECS, methods=METHODS):
-    bundle = cnn_bundle(CIFAR10)
-    x, y = synthetic_classification(1200, CIFAR10.in_shape, 10, signal=12.0)
-    xt, yt = synthetic_classification(400, CIFAR10.in_shape, 10, seed=99,
-                                      signal=12.0)
-    fed = partition_iid(x, y, N_CLIENTS)
+def main(rounds: int = ROUNDS, codecs=CODECS, methods=METHODS, *,
+         cnn=CIFAR10, n_clients=N_CLIENTS, bs=BS, samples=1200, lr=0.15,
+         rounds_for=None, tag="fig9_codec_tradeoff"):
+    """``rounds_for(h) -> rounds`` pins a fixed *batch* budget across
+    methods with different upload periods (the paper-scale preset);
+    default: the same ``rounds`` for everyone."""
+    rounds_for = rounds_for or (lambda h: rounds)
+    bundle = cnn_bundle(cnn)
+    x, y = synthetic_classification(samples, cnn.in_shape, cnn.num_classes,
+                                    signal=12.0)
+    xt, yt = synthetic_classification(max(samples // 3, 400), cnn.in_shape,
+                                      cnn.num_classes, seed=99, signal=12.0)
+    fed = partition_iid(x, y, n_clients)
     pa = jax.eval_shape(bundle.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
-    cm = CostModel(n=N_CLIENTS, q=bundle.smashed_bytes_per_sample,
-                   d_local=len(x) // N_CLIENTS,
+    cm = CostModel(n=n_clients, q=bundle.smashed_bytes_per_sample,
+                   d_local=len(x) // n_clients,
                    w_client=bytes_of(pa["client"]),
                    w_server=bytes_of(pa["server"]), aux=bytes_of(pa["aux"]))
 
     out, rows = {}, []
     for method, h in methods:
         for codec in codecs:
-            curve = run_one(bundle, fed, (xt, yt), cm, method, h, codec,
-                            rounds)
-            tag = f"{method}_h{h}/{codec}"
-            out[tag] = curve
+            curve = run_one(bundle, cnn, fed, (xt, yt), cm, method, h,
+                            codec, rounds_for(h), bs=bs, lr=lr)
+            tag_mh = f"{method}_h{h}/{codec}"
+            out[tag_mh] = curve
             last = curve[-1]
             rows.append({"method": f"{method}(h={h})", "codec": codec,
                          "acc": round(last["acc"], 3),
                          "uplink_MiB": round(last["uplink_bytes"] / 2**20,
                                              3)})
     banner(f"Fig 9 — accuracy vs cumulative uplink wire bytes "
-           f"({N_CLIENTS} clients, {rounds} rounds)")
+           f"({cnn.name}, {n_clients} clients)")
     table(rows, ["method", "codec", "acc", "uplink_MiB"])
 
     # int8 uplink is ~4x below fp32 for every method (exact wire metering)
     by = {(r["method"], r["codec"]): r for r in rows}
-    for method, h in methods:
-        m = f"{method}(h={h})"
-        ratio = by[(m, "none")]["uplink_MiB"] / by[(m, "int8")]["uplink_MiB"]
-        assert 3.5 < ratio <= 4.05, (m, ratio)
+    if "none" in codecs and "int8" in codecs:
+        for method, h in methods:
+            m = f"{method}(h={h})"
+            ratio = by[(m, "none")]["uplink_MiB"] \
+                / by[(m, "int8")]["uplink_MiB"]
+            assert 3.5 < ratio <= 4.05, (m, ratio)
     # the h-lever and the codec lever compose: cse_fsl+int8 has the
     # smallest uplink of the sweep
     cheapest = min(rows, key=lambda r: r["uplink_MiB"])
     assert cheapest["method"].startswith("cse_fsl"), cheapest
     assert cheapest["codec"] in ("int8", "fp8", "topk"), cheapest
 
-    save("fig9_codec_tradeoff", out)
+    save(tag, out)
     return out
+
+
+def paper_main(epochs: int = 200, codecs=CODECS):
+    """The ROADMAP "Fig. 9 at paper scale" item: the codec x h frontier at
+    the paper's Table V budget — every (method, h) trains ``epochs``
+    F-EMNIST epochs (synthetic F-EMNIST-shaped data: 28x28x1, 62 classes,
+    600 samples/writer), i.e. ``epochs * 600 / (20 h)`` global rounds,
+    through the compiled chunk runner."""
+    n = 5
+    return main(
+        codecs=codecs, methods=PAPER_METHODS, cnn=FEMNIST, n_clients=n,
+        bs=PAPER_BS, samples=n * PAPER_D_LOCAL, lr=0.05,
+        rounds_for=lambda h: max(epochs * PAPER_D_LOCAL // (PAPER_BS * h),
+                                 1),
+        tag="fig9_codec_tradeoff_paper")
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="2 rounds, 2 codecs — the CI guard")
+    ap.add_argument("--scale", default="default",
+                    choices=("default", "paper"),
+                    help="paper: the 200-epoch F-EMNIST Table V budget "
+                         "via run_compiled")
+    ap.add_argument("--epochs", type=int, default=200,
+                    help="--scale paper epoch budget")
     ap.add_argument("--rounds", type=int, default=None)
     args = ap.parse_args()
     if args.smoke:
         main(rounds=2, codecs=("none", "int8"),
              methods=(("cse_fsl", 2), ("fsl_an", 1)))
+    elif args.scale == "paper":
+        paper_main(epochs=args.epochs)
     else:
         main(rounds=args.rounds or ROUNDS)

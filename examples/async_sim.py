@@ -22,6 +22,7 @@ from repro.configs.base import FSLConfig
 from repro.core.async_trainer import AsyncTrainer, make_latency
 from repro.core.bundle import cnn_bundle
 from repro.core.methods import available_methods
+from repro.network import NETWORK_MODELS, network_from_flags
 from repro.transport import available_codecs
 from repro.data import FederatedBatcher, partition_iid, \
     synthetic_classification
@@ -42,8 +43,14 @@ def run(args, latency_seed: int):
     fed = partition_iid(x, y, args.clients, seed=1)
     fsl = FSLConfig(num_clients=args.clients, h=args.h, lr=args.lr,
                     method=args.method, codec=args.codec,
+                    model_codec=args.model_codec,
                     grad_clip=1.0 if args.method == "fsl_oc" else 0.0)
-    trainer = AsyncTrainer(bundle, fsl, latency=make_latency(args.latency),
+    latency = make_latency(args.latency)
+    network = network_from_flags(args.network, args.bandwidth_mbps)
+    if not network.is_ideal:
+        # a real network owns all transfer time; latency narrows to compute
+        latency = latency.compute_only()
+    trainer = AsyncTrainer(bundle, fsl, latency=latency, network=network,
                            seed=latency_seed)
     state = trainer.init(args.seed)
     batcher = FederatedBatcher(fed, 20, args.h, seed=1)
@@ -68,6 +75,17 @@ def main():
     ap.add_argument("--codec", default="none",
                     choices=list(available_codecs()),
                     help="uplink wire codec applied to every upload event")
+    ap.add_argument("--model-codec", default="none",
+                    choices=list(available_codecs()),
+                    help="model-sync (FedAvg up/download) wire codec")
+    ap.add_argument("--network", default="ideal",
+                    choices=sorted(NETWORK_MODELS),
+                    help="per-client link model: upload events take "
+                         "wire_bytes/bandwidth + rtt simulated seconds "
+                         "(ideal = infinite bandwidth, the legacy default)")
+    ap.add_argument("--bandwidth-mbps", type=float, default=10.0,
+                    help="mean uplink rate for --network uniform/lognormal/"
+                         "trace (downlink 5x; tiered has per-tier rates)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -85,6 +103,9 @@ def main():
           f"synchronous barrier = {s['sync_time']:.1f}s "
           f"({s['speedup']:.2f}x straggler overhead removed); "
           f"server idle {s['server_idle']:.1f}s over {s['events']} uploads")
+    if args.network != "ideal":
+        print(f"network ({args.network}): transfer {s['comm_time']:.1f}s, "
+              f"model sync {s['model_sync_time']:.1f}s of the async total")
     assert np.isfinite(acc1) and np.isfinite(acc2)
     if args.rounds >= 10:        # short smoke runs are too noisy to compare
         assert abs(acc1 - acc2) < 0.08, (acc1, acc2)

@@ -172,6 +172,7 @@ class FSLConfig:
     method: str = "cse_fsl"     # cse_fsl | fsl_mc | fsl_oc | fsl_an
     server_update: str = "sequential"   # sequential (faithful) | batched
     codec: str = "none"         # uplink wire codec: none|int8|fp8|topk
+    model_codec: str = "none"   # model-sync (FedAvg up/download) wire codec
     grad_clip: float = 0.0      # used by FSL_OC (paper: gradient clipping)
     lr: float = 0.05
     lr_decay_every: int = 10    # rounds (paper: decay every 10 rounds)

@@ -30,6 +30,16 @@ Design notes:
 - determinism: the latency trace is drawn up front from a seeded
   generator in an arrival-independent order; same seed + same trace =>
   bitwise-identical final params.
+- time semantics (post repro.network): LatencyModels describe COMPUTE
+  time; transfer time comes from the :class:`repro.network.NetworkModel`
+  — each event's duration is ``compute + wire_bytes / bandwidth + rtt``,
+  with the payload's codec-effective bytes from the transport, so
+  compression shows up in simulated wall-clock, not just in CommMeter
+  totals.  The latency trace's legacy ``up``/``down`` fields remain as
+  additive base latencies (the default ideal network contributes exactly
+  0.0 s, reproducing every pre-network run bitwise); compose a real
+  network with ``latency.compute_only()`` to hand transfer time wholly to
+  the network model.
 """
 from __future__ import annotations
 
@@ -47,6 +57,11 @@ from repro.core.accounting import CommMeter, CostModel
 from repro.core.bundle import SplitModelBundle
 from repro.core.methods import CommProfile, FSLMethod, get_method
 from repro.core.trainer import AggregationCadence
+from repro.network import IdealNetwork, NetworkModel, NetworkTrace
+
+# Distinct seeded stream for the network trace, so (seed) determines both
+# the compute-latency trace and the link weather without coupling them.
+_NET_STREAM = 0x6E6574          # "net"
 
 # ---------------------------------------------------------------------------
 # Latency models
@@ -73,11 +88,24 @@ class LatencyTrace:
 
 
 class LatencyModel:
-    """Interface: ``draw(rng, rounds, n, k) -> LatencyTrace``."""
+    """Interface: ``draw(rng, rounds, n, k) -> LatencyTrace``.
+
+    Post ``repro.network`` the latency trace means COMPUTE time; its
+    ``up``/``down`` fields survive as additive base per-event latencies
+    for backward compatibility (transfer time proper — payload bytes over
+    bandwidth plus RTT — belongs to the :class:`repro.network.
+    NetworkModel`).  Use :meth:`compute_only` when composing with a real
+    network so the wire isn't double-counted."""
 
     def draw(self, rng: np.random.Generator, rounds: int, n: int,
              k: int) -> LatencyTrace:
         raise NotImplementedError
+
+    def compute_only(self) -> "LatencyModel":
+        """This model narrowed to compute time (up/down zeroed) — the
+        composition contract with a non-ideal NetworkModel, which then
+        owns all transfer time."""
+        return ComputeOnlyLatency(self)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,6 +166,23 @@ class StragglerLatency(LatencyModel):
         return LatencyTrace(compute, tr.up, tr.down)
 
 
+@dataclasses.dataclass(frozen=True)
+class ComputeOnlyLatency(LatencyModel):
+    """Narrow ``base`` to compute time only: the drawn trace keeps the
+    base model's compute column (same rng consumption, so the compute
+    times match the un-narrowed model draw for draw) and zeroes the
+    legacy up/down latencies."""
+    base: LatencyModel
+
+    def draw(self, rng, rounds, n, k):
+        tr = self.base.draw(rng, rounds, n, k)
+        return LatencyTrace(tr.compute, np.zeros_like(tr.up),
+                            np.zeros_like(tr.down))
+
+    def compute_only(self):
+        return self
+
+
 LATENCY_MODELS = {"constant": ConstantLatency, "lognormal": LognormalLatency,
                   "straggler": StragglerLatency}
 
@@ -164,6 +209,8 @@ class AsyncStats:
     sync_time: float = 0.0          # synchronous-barrier counterfactual
     server_busy: float = 0.0        # shared-server service time
     client_wait: float = 0.0        # blocking methods: time spent waiting
+    comm_time: float = 0.0          # network transfer seconds (all events)
+    model_sync_time: float = 0.0    # aggregation model up/download seconds
     # client ids in first-round consumption order (the Fig. 6 permutation)
     arrival_order: List[int] = dataclasses.field(default_factory=list)
 
@@ -181,7 +228,10 @@ class AsyncStats:
                 "async_time": self.async_time, "sync_time": self.sync_time,
                 "server_busy": self.server_busy,
                 "server_idle": self.server_idle,
-                "client_wait": self.client_wait, "speedup": self.speedup}
+                "client_wait": self.client_wait,
+                "comm_time": self.comm_time,
+                "model_sync_time": self.model_sync_time,
+                "speedup": self.speedup}
 
 
 # ---------------------------------------------------------------------------
@@ -206,10 +256,14 @@ class AsyncTrainer:
     """Event-driven facade mirroring :class:`Trainer`:
     ``init`` / ``run`` / ``merged_params`` (plus ``stats``).
 
-    ``latency`` shapes per-client compute/network timings; ``server_time``
-    is the server's service time per consumed upload; ``seed`` seeds the
-    latency trace (the model seed lives in ``init``), so (init seed,
-    latency seed) fully determine a run.
+    ``latency`` shapes per-client compute timings; ``network`` the
+    per-client links — every event's duration is compute + the payload's
+    codec-effective ``wire_bytes / bandwidth + rtt`` (the default
+    :class:`~repro.network.IdealNetwork` adds exactly 0.0 s, reproducing
+    pre-network runs bitwise).  ``server_time`` is the server's service
+    time per consumed upload; ``seed`` seeds both the latency trace and
+    the network trace (distinct streams; the model seed lives in
+    ``init``), so (init seed, latency seed) fully determine a run.
 
     Note: the event engine always consumes uploads one at a time in
     arrival order — ``fsl.server_update="batched"`` (a sync-path fusion)
@@ -219,6 +273,7 @@ class AsyncTrainer:
     fsl: FSLConfig
     method: Optional[Union[str, FSLMethod]] = None  # default: fsl.method
     latency: LatencyModel = dataclasses.field(default_factory=ConstantLatency)
+    network: NetworkModel = dataclasses.field(default_factory=IdealNetwork)
     server_time: float = 0.05
     seed: int = 0
     # wire codecs (None resolves fsl.codec): every upload event is coded
@@ -243,7 +298,8 @@ class AsyncTrainer:
         self._code_down = jax.jit(self.transport.code_downlink) \
             if (self._receive_fn is not None
                 and not self.transport.downlink.is_identity) else None
-        self._agg_fn = jax.jit(m.make_aggregate())
+        self._agg_fn = jax.jit(
+            m.make_wire_aggregate(self.fsl, transport=self.transport))
         self._stacked_keys = ("clients",) if self.hooks.server_shared \
             else ("clients", self.hooks.server_key)
         self.stats = AsyncStats()
@@ -264,13 +320,18 @@ class AsyncTrainer:
     def comm_profile(self, cost_model: CostModel, batch_size: int,
                      batch=None) -> CommProfile:
         """With a ``batch``, the profile's ``*_wire`` fields are exact for
-        this trainer's transport (payload specs recovered via eval_shape)."""
+        this trainer's transport (payload specs recovered via eval_shape);
+        ``model_sync_wire`` needs no batch (init_state shapes suffice)."""
         specs = None
         if batch is not None and not self.transport.is_identity:
             specs = self.method.payload_specs(self.bundle, self.fsl, batch)
+        mspecs = None
+        if not self.transport.model_identity:
+            mspecs = self.method.model_sync_specs(self.bundle, self.fsl)
         return self.method.comm_profile(cost_model, self.fsl, batch_size,
                                         transport=self.transport,
-                                        payload_specs=specs)
+                                        payload_specs=specs,
+                                        model_specs=mspecs)
 
     # -- state <-> per-client slices ----------------------------------------
     def _split(self, state):
@@ -295,14 +356,17 @@ class AsyncTrainer:
     def run(self, state, batcher, num_rounds: int, log_every: int = 0,
             callback=None, meter: Optional[CommMeter] = None,
             cost_model: Optional[CostModel] = None,
-            trace: Optional[LatencyTrace] = None):
+            trace: Optional[LatencyTrace] = None,
+            net_trace: Optional[NetworkTrace] = None):
         """Run ``num_rounds`` global rounds event-driven.
 
         Same contract as ``Trainer.run`` (aggregation on the C-batch
         threshold-crossing cadence resumed from ``state["round"]``,
-        ``log_every`` history rows with an ``aggregated`` flag, CommMeter
-        integration).  ``trace`` overrides the latency trace — pass the
-        same trace to two runs to replay identical wall-clock conditions.
+        ``log_every`` history rows with an ``aggregated`` flag and a
+        cumulative ``sim_time`` column, CommMeter integration).
+        ``trace`` overrides the compute-latency trace and ``net_trace``
+        the link-weather trace — pass the same traces to two runs to
+        replay identical wall-clock conditions.
         """
         fsl, hooks = self.fsl, self.hooks
         n, K = fsl.num_clients, hooks.uploads_per_round
@@ -316,6 +380,19 @@ class AsyncTrainer:
         if trace.shape != (num_rounds, n, K):
             raise ValueError(f"latency trace shape {trace.shape} != "
                              f"{(num_rounds, n, K)}")
+        # the network: the ideal default adds exactly 0.0 s per transfer,
+        # keeping schedules bitwise-identical to a network-free build
+        ideal = self.network.is_ideal and net_trace is None
+        if not ideal:
+            if net_trace is None:
+                net_trace = self.network.draw(
+                    np.random.default_rng((self.seed, _NET_STREAM)),
+                    num_rounds, n, K)
+            if net_trace.shape != (num_rounds, n, K):
+                raise ValueError(f"network trace shape {net_trace.shape} "
+                                 f"!= {(num_rounds, n, K)}")
+        zeros = np.zeros((n, K))
+        up_bytes = down_bytes = ms_up = ms_down = None
         self.stats = AsyncStats()
         slices, shared = self._split(state)
         history = []
@@ -326,10 +403,26 @@ class AsyncTrainer:
                 batch_size = jax.tree_util.tree_leaves(batch[1])[0].shape[2]
                 profile = self.comm_profile(cost_model, batch_size,
                                             batch=batch)
+            if not ideal and up_bytes is None:
+                # per-event payload sizes are static per run: the coded
+                # wire bytes of one upload unit / reply / model sync
+                up_spec, reply_spec = self.method.payload_specs(
+                    self.bundle, fsl, batch)
+                up_bytes = self.transport.uplink_payload_bytes(up_spec)
+                down_bytes = self.transport.downlink_payload_bytes(
+                    reply_spec) if reply_spec is not None else 0
+                mspec = self.method.model_sync_specs(self.bundle, fsl)
+                ms_up = self.transport.model_up_wire_bytes(mspec)
+                ms_down = self.transport.model_down_wire_bytes(mspec)
+            if ideal:
+                xu = xd = zeros
+            else:
+                xu = net_trace.up_seconds(up_bytes, r)
+                xd = net_trace.down_seconds(down_bytes, r)
             lr = self.lr_at(rnd0 + r)
             shared, metrics = self._run_round(
                 slices, shared, batch, lr, trace.compute[r], trace.up[r],
-                trace.down[r], unit0=round_val)
+                trace.down[r], xu, xd, unit0=round_val)
             self.stats.rounds += 1
             round_val += K
             if profile is not None:
@@ -341,12 +434,24 @@ class AsyncTrainer:
                 state = self._join(state, slices, shared, round_val)
                 state = self._agg_fn(state)
                 slices, shared = self._split(state)
+                if not ideal:
+                    # each client ships its coded model up and pulls the
+                    # coded average down, concurrently across the fleet —
+                    # the barrier is the slowest link of the round's tail
+                    secs = float(np.max(
+                        ms_up / net_trace.up_bps[r, :, -1]
+                        + ms_down / net_trace.down_bps[r, :, -1]
+                        + 2.0 * net_trace.rtt[r, :, -1]))
+                    self.stats.async_time += secs
+                    self.stats.sync_time += secs
+                    self.stats.model_sync_time += secs
                 if profile is not None:
-                    meter.log("model_sync", profile.model_sync)
+                    meter.log("model_sync", profile.wire_model_sync)
             if log_every and (r + 1) % log_every == 0:
                 m = {k: float(v) for k, v in metrics.items()}
                 row: dict = {"round": rnd0 + r + 1, **m,
-                             "aggregated": aggregated}
+                             "aggregated": aggregated,
+                             "sim_time": self.stats.async_time}
                 if meter is not None:
                     row["comm_bytes"] = meter.total
                 history.append(row)
@@ -357,14 +462,18 @@ class AsyncTrainer:
 
     def _run_round(self, slices: List[Dict[str, Any]], shared, batch,
                    lr: float, comp: np.ndarray, up: np.ndarray,
-                   down: np.ndarray, unit0: int = 0):
+                   down: np.ndarray, xu: np.ndarray, xd: np.ndarray,
+                   unit0: int = 0):
         """One global round of the event simulation: client transactions
         feed a priority queue of upload arrivals; the server services them
         in arrival order (FIFO on ties, so zero latency reproduces the
-        synchronous order).  ``unit0`` is the absolute upload-unit counter
-        at round entry (= ``state["round"]``), salting the stochastic
-        codec keys the same way the sync assembly does.  Returns
-        (shared', mean metrics)."""
+        synchronous order).  ``xu``/``xd`` are the [n, K] network transfer
+        seconds of the coded upload/reply payloads (wire_bytes/bandwidth +
+        rtt; all-zero under the ideal network), added on top of the legacy
+        per-event ``up``/``down`` base latencies.  ``unit0`` is the
+        absolute upload-unit counter at round entry (= ``state["round"]``),
+        salting the stochastic codec keys the same way the sync assembly
+        does.  Returns (shared', mean metrics)."""
         hooks, st = self.hooks, self.stats
         n, K = len(slices), hooks.uploads_per_round
         blocking = self._receive_fn is not None
@@ -393,7 +502,9 @@ class AsyncTrainer:
             slices[c] = cslice
             tally(m)
             client_t[c] += float(comp[c, k])
-            heapq.heappush(heap, (client_t[c] + float(up[c, k]),
+            st.comm_time += float(xu[c, k])
+            heapq.heappush(heap, (client_t[c] + float(up[c, k])
+                                  + float(xu[c, k]),
                                   next(seq), c, k, upload, pending))
             next_k[c] = k + 1
 
@@ -426,7 +537,8 @@ class AsyncTrainer:
                 replica_free[c] = t_done
             t_end = max(t_end, t_done)
             if blocking:
-                t_reply = t_done + float(down[c, k])
+                t_reply = t_done + float(down[c, k]) + float(xd[c, k])
+                st.comm_time += float(xd[c, k])
                 if self._code_down is not None:
                     reply = self._code_down(reply, _codec_key(k, c, 1))
                 slices[c] = self._receive_fn(slices[c], pending, reply, lr)
@@ -438,12 +550,13 @@ class AsyncTrainer:
 
         st.async_time += max([t_end] + client_t)
         # barrier counterfactual: every upload unit waits for the slowest
-        # client, then the server drains all n uploads back to back.
+        # client (compute + base latency + network transfer), then the
+        # server drains all n uploads back to back.
         for k in range(K):
-            st.sync_time += comp[:, k].max() + up[:, k].max() \
+            st.sync_time += comp[:, k].max() + (up[:, k] + xu[:, k]).max() \
                 + n * self.server_time
             if blocking:
-                st.sync_time += down[:, k].max()
+                st.sync_time += (down[:, k] + xd[:, k]).max()
         means = {key: metric_sums[key] / metric_cnt[key]
                  for key in metric_sums}
         return shared, means

@@ -63,6 +63,7 @@ class CommProfile:
     total_storage: int          # aggregation-time storage (server + clients)
     uplink_smashed_wire: int = -1   # codec-effective; -1 -> uplink_smashed
     downlink_grads_wire: int = -1   # codec-effective; -1 -> downlink_grads
+    model_sync_wire: int = -1       # codec-effective; -1 -> model_sync
 
     @property
     def wire_uplink_smashed(self) -> int:
@@ -73,6 +74,11 @@ class CommProfile:
     def wire_downlink_grads(self) -> int:
         w = self.downlink_grads_wire
         return w if w >= 0 else self.downlink_grads
+
+    @property
+    def wire_model_sync(self) -> int:
+        w = self.model_sync_wire
+        return w if w >= 0 else self.model_sync
 
     @property
     def per_round_total(self) -> int:
@@ -337,11 +343,60 @@ class FSLMethod:
         round_step = self.make_round_step(bundle, fsl,
                                           server_constraint=server_constraint,
                                           transport=transport)
-        return make_chunk_step(round_step, self.make_aggregate(), fsl,
-                               self.unit_batches(fsl))
+        return make_chunk_step(round_step,
+                               self.make_wire_aggregate(fsl,
+                                                        transport=transport),
+                               fsl, self.unit_batches(fsl))
 
     def make_aggregate(self):
         raise NotImplementedError
+
+    def make_wire_aggregate(self, fsl: FSLConfig, transport=None):
+        """Aggregation with the model-sync wire made explicit: before
+        FedAvg each client's model subtree (``state["clients"]["params"]``
+        — what :meth:`merged_params` deploys and what Table II's
+        ``2 n alpha |w|`` counts) crosses the uplink through the
+        transport's ``model_up`` codec; after FedAvg the averaged model is
+        coded ONCE through ``model_down`` and broadcast, exactly like a
+        server shipping one compressed checkpoint to every client.  Server
+        replicas (``state["servers"]``) never cross the client link, so
+        they aggregate uncoded.
+
+        With the identity model codecs (the default) this returns
+        :meth:`make_aggregate` unchanged — zero added ops, bitwise-legacy
+        aggregation.  Both engines and the compiled chunk runner route
+        aggregation through this wrapper, so quantized model sync shows up
+        identically in all three execution paths (key salts 2/3 of
+        ``Transport.unit_key``)."""
+        from repro.transport import resolve_transport
+        tp = resolve_transport(transport, fsl)
+        agg = self.make_aggregate()
+        if tp.model_identity:
+            return agg
+        n = fsl.num_clients
+
+        def _with_params(state, params):
+            return {**state, "clients": {**state["clients"],
+                                         "params": params}}
+
+        def aggregate(state):
+            params = state["clients"]["params"]
+            keys = jax.vmap(jax.random.fold_in, (None, 0))(
+                tp.unit_key(state["round"], salt=2), jnp.arange(n))
+            params = jax.vmap(tp.code_model_up)(params, keys)
+            state = agg(_with_params(state, params))
+            # post-FedAvg the stacked clients are identical: code the
+            # average once and broadcast the same coded copy to all n
+            avg = jax.tree_util.tree_map(lambda x: x[0],
+                                         state["clients"]["params"])
+            avg = tp.code_model_down(avg,
+                                     tp.unit_key(state["round"], salt=3))
+            params = jax.tree_util.tree_map(
+                lambda d, x: jnp.broadcast_to(d, x.shape).astype(x.dtype),
+                avg, state["clients"]["params"])
+            return _with_params(state, params)
+
+        return aggregate
 
     def merged_params(self, state) -> Dict[str, Any]:
         raise NotImplementedError
@@ -400,8 +455,20 @@ class FSLMethod:
                                          upload, lr)
         return upload, reply
 
+    def model_sync_specs(self, bundle: SplitModelBundle, fsl: FSLConfig):
+        """Abstract pytree of ONE client's model-sync payload — the
+        ``state["clients"]["params"]`` subtree that crosses the FedAvg
+        wire at aggregation (client model + aux head; opt state stays
+        local, matching Table II's ``2 n alpha |w|``)."""
+        state = jax.eval_shape(lambda k: self.init_state(bundle, fsl, k),
+                               jax.ShapeDtypeStruct((2,), jnp.uint32))
+        return jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+            state["clients"]["params"])
+
     def comm_profile(self, cm: CostModel, fsl: FSLConfig, batch_size: int,
-                     transport=None, payload_specs=None) -> CommProfile:
+                     transport=None, payload_specs=None,
+                     model_specs=None) -> CommProfile:
         n, q, lb = cm.n, cm.q, cm.label_bytes
         uploads = fsl.h if self.uploads_every_batch else 1
         smashed = n * uploads * q * batch_size
@@ -411,7 +478,7 @@ class FSLMethod:
         sync = 2 * n * (cm.w_client + aux)
         server = (n if self.server_replicated else 1) * (cm.w_server + aux)
         total = n * (cm.w_client + aux) + server
-        wire_up = wire_down = -1
+        wire_up = wire_down = wire_sync = -1
         if (transport is not None and payload_specs is not None
                 and not transport.is_identity):
             up_spec, reply_spec = payload_specs
@@ -419,11 +486,16 @@ class FSLMethod:
             if self.downloads_gradients and reply_spec is not None:
                 wire_down = n * uploads * transport.downlink_wire_bytes(
                     reply_spec)
+        if (transport is not None and model_specs is not None
+                and not transport.model_identity):
+            wire_sync = n * (transport.model_up_wire_bytes(model_specs)
+                             + transport.model_down_wire_bytes(model_specs))
         return CommProfile(uplink_smashed=smashed, uplink_labels=labels,
                            downlink_grads=grads, model_sync=sync,
                            server_storage=server, total_storage=total,
                            uplink_smashed_wire=wire_up,
-                           downlink_grads_wire=wire_down)
+                           downlink_grads_wire=wire_down,
+                           model_sync_wire=wire_sync)
 
     def __repr__(self):
         return f"<FSLMethod {self.name}>"

@@ -94,7 +94,11 @@ class Trainer:
                               server_constraint=self.server_constraint,
                               transport=self.transport),
             donate_argnums=donate)
-        self.agg_fn = jax.jit(m.make_aggregate(), donate_argnums=donate)
+        # aggregation goes through the model-sync wire (identity model
+        # codecs: make_wire_aggregate returns the plain aggregate, bitwise)
+        self.agg_fn = jax.jit(
+            m.make_wire_aggregate(self.fsl, transport=self.transport),
+            donate_argnums=donate)
         # The compiled multi-round runner (run_compiled): R rounds fused
         # into one donated lax.scan program.  jit caches per chunk length,
         # so a trailing partial chunk costs one extra compile, not one per
@@ -132,13 +136,66 @@ class Trainer:
     def comm_profile(self, cost_model: CostModel, batch_size: int,
                      batch=None) -> CommProfile:
         """With a ``batch``, the profile's ``*_wire`` fields are exact for
-        this trainer's transport (payload specs recovered via eval_shape)."""
+        this trainer's transport (payload specs recovered via eval_shape);
+        ``model_sync_wire`` needs no batch (model specs come from
+        ``init_state`` shapes)."""
         specs = None
         if batch is not None and not self.transport.is_identity:
             specs = self.method.payload_specs(self.bundle, self.fsl, batch)
+        mspecs = None
+        if not self.transport.model_identity:
+            mspecs = self.method.model_sync_specs(self.bundle, self.fsl)
         return self.method.comm_profile(cost_model, self.fsl, batch_size,
                                         transport=self.transport,
-                                        payload_specs=specs)
+                                        payload_specs=specs,
+                                        model_specs=mspecs)
+
+    def wallclock_estimate(self, cost_model: CostModel, batch_size: int,
+                           num_rounds: int, network, batch=None,
+                           compute: float = 1.0, server_time: float = 0.05):
+        """Analytic synchronous wall-clock for ``num_rounds`` rounds under
+        ``network`` (a :class:`repro.network.NetworkModel`) — the same
+        barrier time model the AsyncTrainer reports as its synchronous
+        counterfactual (``AsyncStats.sync_time``), fed by the same
+        codec-effective wire bytes.  With a ``batch`` the per-upload
+        payload bytes are exact (payload specs via eval_shape); without
+        one they derive from the analytic CommProfile.  ``compute`` is the
+        per-upload-unit client compute seconds (the compute-only
+        LatencyModel mean).  Returns a
+        :class:`repro.network.WallClockEstimate`."""
+        from repro.network.wallclock import estimate_sync_wallclock
+        fsl, m, tp = self.fsl, self.method, self.transport
+        n = fsl.num_clients
+        K = fsl.h if m.uploads_every_batch else 1
+        profile = self.comm_profile(cost_model, batch_size, batch=batch)
+        if batch is not None:
+            up_spec, reply_spec = m.payload_specs(self.bundle, fsl, batch)
+            up_bytes = tp.uplink_payload_bytes(up_spec)
+            down_bytes = tp.downlink_payload_bytes(reply_spec) \
+                if reply_spec is not None else 0
+        else:
+            if not tp.is_identity:
+                raise ValueError(
+                    "wallclock_estimate needs a `batch` to derive the "
+                    "codec-effective payload bytes of a non-identity "
+                    "transport (without one the estimate would silently "
+                    "use uncompressed sizes)")
+            up_bytes = (profile.wire_uplink_smashed
+                        + profile.uplink_labels) // (n * K)
+            down_bytes = profile.wire_downlink_grads // (n * K)
+        mspecs = m.model_sync_specs(self.bundle, fsl)
+        ms_up = tp.model_up_wire_bytes(mspecs)
+        ms_down = tp.model_down_wire_bytes(mspecs)
+        # rounds that cross a C-batch threshold — at most ONE aggregation
+        # per round, exactly like AggregationCadence.advance(h)
+        C = fsl.resolved_agg_every
+        aggs = sum(1 for r in range(1, num_rounds + 1)
+                   if (r * fsl.h) // C > ((r - 1) * fsl.h) // C)
+        return estimate_sync_wallclock(
+            network, n, num_rounds, uploads_per_round=K, up_bytes=up_bytes,
+            down_bytes=down_bytes, blocking=m.downloads_gradients,
+            compute=compute, server_time=server_time, agg_events=aggs,
+            model_up_bytes=ms_up, model_down_bytes=ms_down)
 
     # -- shared per-round bookkeeping (run and run_compiled MUST log
     # identically — the bitwise-history contract in tests/test_compiled.py
@@ -153,7 +210,7 @@ class Trainer:
             meter.log("uplink_labels", profile.uplink_labels)
             meter.log("downlink_grads", profile.wire_downlink_grads)
             if aggregated:
-                meter.log("model_sync", profile.model_sync)
+                meter.log("model_sync", profile.wire_model_sync)
         if log_every and (rnd + 1 - rnd0) % log_every == 0:
             m = metrics_fn()
             row: dict = {"round": rnd + 1, **m, "aggregated": aggregated}

@@ -29,6 +29,7 @@ from repro.core.accounting import CommMeter, CostModel
 from repro.core.bundle import transformer_bundle
 from repro.core.methods import available_methods
 from repro.core.trainer import Trainer
+from repro.network import NETWORK_MODELS, network_from_flags
 from repro.transport import available_codecs
 from repro.common import bytes_of, count_params
 from repro.data import FederatedBatcher, partition_dirichlet, partition_iid, \
@@ -88,6 +89,16 @@ def main():
                     choices=list(available_codecs()),
                     help="uplink wire codec (CommMeter reports the "
                          "compressed wire bytes)")
+    ap.add_argument("--model-codec", default="none",
+                    choices=list(available_codecs()),
+                    help="model-sync (FedAvg up/download) wire codec")
+    ap.add_argument("--network", default="ideal",
+                    choices=sorted(NETWORK_MODELS),
+                    help="per-client link model for the analytic "
+                         "wall-clock estimate printed after training")
+    ap.add_argument("--bandwidth-mbps", type=float, default=10.0,
+                    help="mean uplink rate for --network uniform/lognormal/"
+                         "trace (downlink 5x; tiered has per-tier rates)")
     add_size_args(ap)
     ap.add_argument("--non-iid", action="store_true")
     ap.add_argument("--server-update", default="sequential")
@@ -103,7 +114,7 @@ def main():
         cfg = cfg.reduced()
     fsl = FSLConfig(num_clients=args.clients, h=args.h, lr=args.lr,
                     method=args.method, server_update=args.server_update,
-                    codec=args.codec)
+                    codec=args.codec, model_codec=args.model_codec)
     bundle = transformer_bundle(cfg)
     fed = build_data(cfg, fsl, args.seq, args.samples, args.non_iid)
     batcher = LMBatcher(cfg, fed, args.batch, args.h)
@@ -145,10 +156,25 @@ def main():
     print(f"\n{args.rounds} rounds in {dt:.1f}s; "
           f"total comm = {meter.total/2**20:.1f} MiB "
           f"({json.dumps({k: round(v/2**20, 2) for k, v in meter.counts.items()})} MiB)")
+    wallclock = None
+    if args.network != "ideal":
+        # analytic barrier wall-clock under the selected links — the same
+        # time model the AsyncTrainer measures event for event
+        network = network_from_flags(args.network, args.bandwidth_mbps)
+        est = trainer.wallclock_estimate(cm, args.batch, args.rounds,
+                                         network,
+                                         batch=batcher.next_round())
+        wallclock = est.as_dict()
+        print(f"simulated sync wall-clock ({args.network}, "
+              f"{args.bandwidth_mbps:g} Mbps up): {est.total:.1f}s "
+              f"({est.comm_time:.1f}s transfer, "
+              f"{est.model_sync_time:.1f}s model sync over "
+              f"{est.agg_events} aggregations)")
     if args.out:
         with open(args.out, "w") as f:
             json.dump({"args": vars(args), "history": history,
-                       "comm": meter.as_dict()}, f, indent=1)
+                       "comm": meter.as_dict(), "wallclock": wallclock}, f,
+                      indent=1)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,21 @@
+"""repro.network: codec-aware network simulation between transport and time.
+
+The transport layer decides how many bytes cross the client-server wire;
+this package decides how long they take.  See :mod:`repro.network.model`
+for the per-client link models and :mod:`repro.network.wallclock` for the
+synchronous analytic estimator (README "Network simulation").
+"""
+from repro.network.model import (MBPS, TIERS, ClientLink, IdealNetwork,
+                                 LognormalNetwork, NetworkModel,
+                                 NetworkTrace, NETWORK_MODELS, TieredNetwork,
+                                 TraceNetwork, UniformNetwork, make_network,
+                                 network_from_flags)
+from repro.network.wallclock import WallClockEstimate, \
+    estimate_sync_wallclock
+
+__all__ = [
+    "MBPS", "TIERS", "ClientLink", "IdealNetwork", "LognormalNetwork",
+    "NetworkModel", "NetworkTrace", "NETWORK_MODELS", "TieredNetwork",
+    "TraceNetwork", "UniformNetwork", "make_network", "network_from_flags",
+    "WallClockEstimate", "estimate_sync_wallclock",
+]

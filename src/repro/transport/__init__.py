@@ -260,8 +260,10 @@ def _is_float(leaf) -> bool:
 
 @dataclasses.dataclass(frozen=True)
 class Transport:
-    """The wire between clients and server: an uplink codec for the
-    smashed-data payloads and a downlink codec for gradient replies.
+    """The wires between clients and server: an uplink codec for the
+    smashed-data payloads, a downlink codec for gradient replies, and a
+    second codec pair for the FedAvg model-sync wire (each client's model
+    upload at aggregation and the averaged model's download back).
     Integer leaves (labels) pass through uncoded; every float leaf of a
     payload pytree is coded independently (``fold_in`` by leaf index, so
     stochastic codecs stay deterministic per (seed, round, client, leaf)).
@@ -269,22 +271,35 @@ class Transport:
 
     uplink: Codec = _CODECS["none"]
     downlink: Codec = _CODECS["none"]
+    model_up: Codec = _CODECS["none"]
+    model_down: Codec = _CODECS["none"]
     seed: int = 0
 
     @property
     def is_identity(self) -> bool:
         return self.uplink.is_identity and self.downlink.is_identity
 
+    @property
+    def model_identity(self) -> bool:
+        """True when the model-sync wire is the raw fp32 one — model-sync
+        aggregation then bypasses codec ops entirely (bitwise legacy)."""
+        return self.model_up.is_identity and self.model_down.is_identity
+
     def unit_key(self, unit, client=None, salt: int = 0):
         """The stochastic-codec key for upload unit ``unit`` (the global
         ``state["round"]`` counter) of ``client``; ``salt`` 0 = uplink,
-        1 = downlink.  THE single derivation both engines use — the sync
-        assembly and the async event loop must salt identically so a
-        zero-latency async run reproduces the sync quantization noise.
-        ``client=None`` returns the pre-client key (vmap-fold client ids
-        onto it with ``jax.vmap(jax.random.fold_in, (None, 0))``)."""
-        key = jax.random.fold_in(jax.random.PRNGKey(self.seed),
-                                 unit * 2 + salt)
+        1 = downlink, 2 = model-sync up, 3 = model-sync down.  THE single
+        derivation both engines use — the sync assembly and the async
+        event loop must salt identically so a zero-latency async run
+        reproduces the sync quantization noise.  Salts 0/1 keep the
+        original ``unit * 2 + salt`` fold, so coded runs from before the
+        model-sync wire stay bitwise-reproducible; salts 2/3 fold a
+        disjoint negative stream.  ``client=None`` returns the pre-client
+        key (vmap-fold client ids onto it with
+        ``jax.vmap(jax.random.fold_in, (None, 0))``)."""
+        data = unit * 2 + salt if salt < 2 else \
+            jnp.asarray(-1 - (unit * 2 + salt - 2), jnp.int32)
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), data)
         if client is not None:
             key = jax.random.fold_in(key, client)
         return key
@@ -307,6 +322,14 @@ class Transport:
     def code_downlink(self, payload, key=None):
         return self._code(self.downlink, payload, key)
 
+    def code_model_up(self, model, key=None):
+        """One client's model as uploaded for aggregation (FedAvg up)."""
+        return self._code(self.model_up, model, key)
+
+    def code_model_down(self, model, key=None):
+        """The aggregated model as broadcast back to clients."""
+        return self._code(self.model_down, model, key)
+
     def _wire(self, codec: Codec, spec_tree) -> int:
         """Exact wire bytes of the FLOAT leaves of a payload spec (integer
         side channels — labels — are accounted separately by CommProfile)."""
@@ -314,27 +337,64 @@ class Transport:
                    for leaf in jax.tree_util.tree_leaves(spec_tree)
                    if _is_float(leaf))
 
+    def _payload(self, codec: Codec, spec_tree) -> int:
+        """Total wire bytes of a payload as shipped: coded float leaves
+        plus raw integer side channels (labels / indices).  This is the
+        byte count the network model turns into transfer seconds."""
+        total = 0
+        for leaf in jax.tree_util.tree_leaves(spec_tree):
+            if _is_float(leaf):
+                total += codec.wire_bytes(leaf)
+            else:
+                shape, dtype = _spec_of(leaf)
+                total += int(np.prod(shape)) * np.dtype(dtype).itemsize
+        return int(total)
+
     def uplink_wire_bytes(self, spec_tree) -> int:
         return self._wire(self.uplink, spec_tree)
 
     def downlink_wire_bytes(self, spec_tree) -> int:
         return self._wire(self.downlink, spec_tree)
 
+    def model_up_wire_bytes(self, spec_tree) -> int:
+        return self._wire(self.model_up, spec_tree)
+
+    def model_down_wire_bytes(self, spec_tree) -> int:
+        return self._wire(self.model_down, spec_tree)
+
+    def uplink_payload_bytes(self, spec_tree) -> int:
+        return self._payload(self.uplink, spec_tree)
+
+    def downlink_payload_bytes(self, spec_tree) -> int:
+        return self._payload(self.downlink, spec_tree)
+
 
 def make_transport(uplink: Union[str, Codec] = "none",
                    downlink: Union[str, Codec] = "none",
+                   model_sync: Union[str, Codec, None] = None,
+                   model_up: Union[str, Codec, None] = None,
+                   model_down: Union[str, Codec, None] = None,
                    seed: int = 0) -> Transport:
+    """``model_sync`` sets both directions of the model-sync wire at once;
+    ``model_up`` / ``model_down`` override per direction."""
+    base = model_sync if model_sync is not None else "none"
     return Transport(uplink=get_codec(uplink), downlink=get_codec(downlink),
+                     model_up=get_codec(model_up if model_up is not None
+                                        else base),
+                     model_down=get_codec(model_down if model_down is not None
+                                          else base),
                      seed=seed)
 
 
 def resolve_transport(transport, fsl=None) -> Transport:
     """Normalize a Trainer/method ``transport=`` argument: ``None`` reads
-    ``fsl.codec``, a string names an uplink codec, a Transport passes
-    through."""
+    ``fsl.codec`` (uplink) and ``fsl.model_codec`` (model-sync wire), a
+    string names an uplink codec, a Transport passes through."""
     if isinstance(transport, Transport):
         return transport
+    ms = getattr(fsl, "model_codec", "none") if fsl is not None else "none"
     if transport is None:
         name = getattr(fsl, "codec", "none") if fsl is not None else "none"
-        return make_transport(name or "none")
-    return make_transport(transport)
+        return make_transport(name or "none", model_sync=ms or "none")
+    # a string names the uplink codec; fsl.model_codec still applies
+    return make_transport(transport, model_sync=ms or "none")

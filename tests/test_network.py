@@ -1,0 +1,454 @@
+"""The repro.network subsystem: link models and presets, the codec-aware
+event time model, the frozen ideal-network bitwise contract, the
+model-sync wire (bytes and seconds), and the single time model shared by
+the sync estimator and the async engine's barrier counterfactual."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common import bytes_of
+from repro.configs.base import FSLConfig
+from repro.core.accounting import CommMeter, CostModel
+from repro.core.async_trainer import (AsyncTrainer, ConstantLatency,
+                                      LognormalLatency, make_latency)
+from repro.core.bundle import cnn_bundle
+from repro.core.methods import get_method
+from repro.core.trainer import Trainer
+from repro.data import FederatedBatcher, partition_iid, \
+    synthetic_classification
+from repro.models.cnn import CIFAR10
+from repro.network import (MBPS, TIERS, IdealNetwork, LognormalNetwork,
+                           TieredNetwork, TraceNetwork, UniformNetwork,
+                           make_network)
+from repro.transport import make_transport
+
+ALL_METHODS = ("cse_fsl", "fsl_mc", "fsl_oc", "fsl_an")
+
+INF_BW = UniformNetwork(up_mbps=float("inf"), down_mbps=float("inf"),
+                        rtt=0.0)
+
+
+def _setup(n=2, samples=240, seed=0):
+    bundle = cnn_bundle(CIFAR10)
+    x, y = synthetic_classification(samples, CIFAR10.in_shape, 10, seed=seed,
+                                    signal=12.0)
+    return bundle, partition_iid(x, y, n, seed=seed)
+
+
+def _cost_model(bundle, n, d_local=120):
+    pa = jax.eval_shape(bundle.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return CostModel(n=n, q=bundle.smashed_bytes_per_sample, d_local=d_local,
+                     w_client=bytes_of(pa["client"]),
+                     w_server=bytes_of(pa["server"]), aux=bytes_of(pa["aux"]))
+
+
+def _leaves_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# Link models / presets
+# ---------------------------------------------------------------------------
+
+
+def test_network_models_shapes_and_determinism():
+    for name, kw in (("uniform", {}), ("lognormal", {}), ("tiered", {}),
+                     ("trace", {})):
+        model = make_network(name, **kw)
+        t1 = model.draw(np.random.default_rng(3), 4, 5, 2)
+        t2 = model.draw(np.random.default_rng(3), 4, 5, 2)
+        assert t1.shape == (4, 5, 2)
+        for f in ("up_bps", "down_bps", "rtt"):
+            arr1, arr2 = getattr(t1, f), getattr(t2, f)
+            assert arr1.shape == (4, 5, 2)
+            np.testing.assert_array_equal(arr1, arr2)  # seeded => same trace
+        assert (t1.up_bps > 0).all() and (t1.down_bps > 0).all()
+        assert (t1.rtt >= 0).all()
+    with pytest.raises(KeyError, match="unknown network model"):
+        make_network("carrier-pigeon")
+
+
+def test_transfer_time_math_exact():
+    # 8 Mbps uplink = 1e6 bytes/s: a 1 MB payload takes 1 s + rtt
+    tr = UniformNetwork(up_mbps=8.0, down_mbps=16.0, rtt=0.05).draw(
+        np.random.default_rng(0), 2, 3, 1)
+    np.testing.assert_allclose(tr.up_seconds(1_000_000, 0), 1.05)
+    np.testing.assert_allclose(tr.down_seconds(1_000_000, 1), 0.55)
+    # zero bytes still pay the RTT; the inf-bandwidth zero-rtt link is 0.0
+    np.testing.assert_array_equal(tr.up_seconds(0, 0), 0.05)
+    ideal = IdealNetwork().draw(np.random.default_rng(0), 1, 3, 1)
+    np.testing.assert_array_equal(ideal.up_seconds(10 ** 12, 0), 0.0)
+
+
+def test_tiered_assignment_is_deterministic_quantile_mix():
+    net = TieredNetwork()                       # 25% 3g / 50% 4g / 25% wifi
+    tiers = [net.client_tier(c, 8) for c in range(8)]
+    assert tiers == ["3g", "3g", "4g", "4g", "4g", "4g", "wifi", "wifi"]
+    links = net.expected_links(8)
+    assert links[0] == TIERS["3g"] and links[7] == TIERS["wifi"]
+    tr = net.draw(np.random.default_rng(0), 2, 8, 1)
+    np.testing.assert_array_equal(tr.up_bps[0, :, 0],
+                                  [l.up_bps for l in links])
+    with pytest.raises(ValueError, match="sum to 1"):
+        TieredNetwork(tiers=(("3g", 0.5),))
+    with pytest.raises(KeyError, match="unknown tier"):
+        TieredNetwork(tiers=(("smoke-signal", 1.0),))
+
+
+def test_trace_network_cycles_round_series():
+    net = TraceNetwork(up_mbps=(4.0, 8.0), down_mbps=(8.0, 16.0), rtt=0.01)
+    tr = net.draw(np.random.default_rng(0), 5, 2, 1)
+    np.testing.assert_array_equal(tr.up_bps[0], tr.up_bps[2])
+    np.testing.assert_array_equal(tr.up_bps[1], tr.up_bps[3])
+    assert tr.up_bps[0, 0, 0] == 4.0 * MBPS
+    assert tr.up_bps[1, 0, 0] == 8.0 * MBPS
+    d = TraceNetwork.diurnal(scale_mbps=20.0)
+    assert np.isclose(np.mean(d.up_mbps), 20.0)
+
+
+def test_compute_only_latency_narrows_up_down():
+    base = make_latency("lognormal")
+    t_full = base.draw(np.random.default_rng(5), 3, 4, 2)
+    t_narrow = base.compute_only().draw(np.random.default_rng(5), 3, 4, 2)
+    np.testing.assert_array_equal(t_narrow.compute, t_full.compute)
+    np.testing.assert_array_equal(t_narrow.up, 0.0)
+    np.testing.assert_array_equal(t_narrow.down, 0.0)
+    assert base.compute_only().compute_only() is base.compute_only() \
+        or t_narrow.up.sum() == 0.0     # idempotent narrowing
+
+
+# ---------------------------------------------------------------------------
+# The frozen backward-compat contract (ISSUE 5 satellite): an ideal network
+# — infinite bandwidth, zero RTT — reproduces pre-network behavior bitwise
+# ---------------------------------------------------------------------------
+
+
+def _run_async(bundle, fed, fsl, latency, network, rounds=3, seed=0,
+               meter=None, cm=None):
+    t = AsyncTrainer(bundle, fsl, latency=latency, network=network, seed=11)
+    s, h = t.run(t.init(seed), FederatedBatcher(fed, 8, fsl.h, seed=0),
+                 rounds, log_every=1, meter=meter, cost_model=cm)
+    return s, h, t.stats
+
+
+def test_inf_bandwidth_network_bitwise_matches_ideal_default():
+    """The regression contract: routing events through the real network
+    code path with infinite bandwidth + zero RTT adds exactly 0.0 s per
+    transfer — schedules, stats, history, and trained states are
+    bitwise-identical to the ideal (pre-network) default."""
+    n, h = 2, 2
+    bundle, fed = _setup(n=n)
+    fsl = FSLConfig(num_clients=n, h=h, lr=0.05)
+    s1, h1, st1 = _run_async(bundle, fed, fsl, LognormalLatency(),
+                             IdealNetwork())
+    s2, h2, st2 = _run_async(bundle, fed, fsl, LognormalLatency(), INF_BW)
+    assert _leaves_equal(s1, s2)
+    assert st1.as_dict() == st2.as_dict()
+    assert h1 == h2
+    assert st2.comm_time == 0.0 and st2.model_sync_time == 0.0
+
+
+def test_zero_latency_inf_bandwidth_reproduces_sync_schedule():
+    """Zero compute latency + infinite bandwidth realizes the synchronous
+    engine's aggregation schedule and (fp-tol) its trained state — the
+    old zero-latency contract, now through the network code path."""
+    n, h, agg_every, rounds = 2, 3, 2, 4
+    bundle, fed = _setup(n=n)
+    fsl = FSLConfig(num_clients=n, h=h, agg_every=agg_every, lr=0.05)
+    sync = Trainer(bundle, fsl, donate=False)
+    s_sync, hist_sync = sync.run(sync.init(0),
+                                 FederatedBatcher(fed, 8, h, seed=0),
+                                 rounds, log_every=1)
+    s_async, hist_async, _ = _run_async(
+        bundle, fed, fsl, ConstantLatency(0.0, 0.0, 0.0), INF_BW,
+        rounds=rounds)
+    assert [r["aggregated"] for r in hist_sync] \
+        == [r["aggregated"] for r in hist_async]
+    for a, b in zip(jax.tree_util.tree_leaves(s_sync),
+                    jax.tree_util.tree_leaves(s_async)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_network_trace_replay_and_shape_check():
+    """Passing the same NetworkTrace replays identical wall-clock
+    conditions regardless of the trainer's own network model."""
+    n, h, rounds = 2, 2, 2
+    bundle, fed = _setup(n=n)
+    fsl = FSLConfig(num_clients=n, h=h, lr=0.05)
+    net_trace = UniformNetwork(up_mbps=2.0).draw(np.random.default_rng(4),
+                                                 rounds, n, 1)
+
+    def one(network):
+        t = AsyncTrainer(bundle, fsl, latency=ConstantLatency(1.0, 0.0, 0.0),
+                         network=network, seed=3)
+        s, _ = t.run(t.init(0), FederatedBatcher(fed, 8, h, seed=0), rounds,
+                     net_trace=net_trace)
+        return s, t.stats
+
+    s1, st1 = one(UniformNetwork(up_mbps=100.0))
+    s2, st2 = one(TieredNetwork())
+    assert _leaves_equal(s1, s2)
+    assert st1.as_dict() == st2.as_dict()
+    assert st1.comm_time > 0.0
+    with pytest.raises(ValueError, match="network trace shape"):
+        t = AsyncTrainer(bundle, fsl, network=UniformNetwork())
+        t.run(t.init(0), FederatedBatcher(fed, 8, h, seed=0), rounds + 1,
+              net_trace=net_trace)
+
+
+# ---------------------------------------------------------------------------
+# Codec-aware wall-clock: compression buys simulated time
+# ---------------------------------------------------------------------------
+
+
+def test_finite_bandwidth_compression_buys_wallclock():
+    """On a finite link the int8 uplink strictly beats identity in
+    simulated time for the same number of rounds — the whole point of
+    the subsystem (compression used to change bytes only)."""
+    n, h, rounds = 2, 2, 2
+    bundle, fed = _setup(n=n)
+    slow = UniformNetwork(up_mbps=1.0, down_mbps=5.0, rtt=0.05)
+
+    def one(codec):
+        fsl = FSLConfig(num_clients=n, h=h, lr=0.05, codec=codec)
+        _, _, st = _run_async(bundle, fed, fsl,
+                              ConstantLatency(0.1, 0.0, 0.0), slow,
+                              rounds=rounds)
+        return st
+
+    st_none, st_int8 = one("none"), one("int8")
+    assert st_none.comm_time > st_int8.comm_time > 0.0
+    assert st_none.async_time > st_int8.async_time
+    assert st_none.sync_time > st_int8.sync_time
+    # model sync (fp32 on both runs here) costs the same simulated time
+    assert np.isclose(st_none.model_sync_time, st_int8.model_sync_time)
+    assert st_none.model_sync_time > 0.0
+
+
+# ---------------------------------------------------------------------------
+# The model-sync wire: accounting parity + coded aggregation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_model_sync_identity_parity(method):
+    """ISSUE 5 satellite: identity-codec model sync matches the old
+    analytic fp32 numbers EXACTLY — the spec-derived wire bytes equal
+    Table II's ``2 n (alpha|w| + |a|)`` for every method."""
+    n = 2
+    bundle, _ = _setup(n=n)
+    fsl = FSLConfig(num_clients=n, h=2, method=method)
+    m = get_method(method)
+    cm = _cost_model(bundle, n)
+    profile = m.comm_profile(cm, fsl, 8)
+    assert profile.wire_model_sync == profile.model_sync
+    tp = make_transport()                       # all-identity
+    specs = m.model_sync_specs(bundle, fsl)
+    per_client = tp.model_up_wire_bytes(specs) \
+        + tp.model_down_wire_bytes(specs)
+    assert n * per_client == profile.model_sync
+
+
+def test_model_codec_meters_compressed_sync_and_identity_unchanged():
+    """With an int8 model-sync wire the CommMeter logs ~4x fewer
+    model_sync bytes; the identity wire logs exactly the legacy numbers."""
+    n, h, rounds = 2, 2, 3
+    bundle, fed = _setup(n=n)
+    cm = _cost_model(bundle, n)
+
+    def run(model_codec):
+        fsl = FSLConfig(num_clients=n, h=h, lr=0.05,
+                        model_codec=model_codec)
+        tr = Trainer(bundle, fsl, donate=False)
+        meter = CommMeter()
+        tr.run(tr.init(0), FederatedBatcher(fed, 8, h, seed=0), rounds,
+               meter=meter, cost_model=cm)
+        return tr, meter
+
+    tr32, m32 = run("none")
+    profile = tr32.comm_profile(cm, 8)
+    assert m32.counts["model_sync"] == rounds * profile.model_sync
+    tr8, m8 = run("int8")
+    assert 0 < m8.counts["model_sync"] < m32.counts["model_sync"] / 3.5
+    # the other wires are untouched by the model codec
+    for k in ("uplink_smashed", "uplink_labels", "downlink_grads"):
+        assert m8.counts[k] == m32.counts[k]
+
+
+def test_wire_aggregate_identity_is_plain_aggregate():
+    """Identity model codecs: make_wire_aggregate returns the method's
+    aggregate untouched (zero added ops — the bitwise-legacy guarantee);
+    int8 model codecs keep the FedAvg contract (clients identical after
+    aggregation, finite params, structure preserved)."""
+    n = 3
+    bundle, fed = _setup(n=n, samples=360)
+    fsl = FSLConfig(num_clients=n, h=2, lr=0.05)
+    m = get_method("cse_fsl")
+    state = m.init_state(bundle, fsl, jax.random.PRNGKey(0))
+    plain = m.make_aggregate()(state)
+    wired = m.make_wire_aggregate(fsl)(state)
+    assert _leaves_equal(plain, wired)
+
+    fsl8 = FSLConfig(num_clients=n, h=2, lr=0.05, model_codec="int8")
+    agg8 = jax.jit(m.make_wire_aggregate(fsl8))
+    out = agg8(state)
+    assert jax.tree_util.tree_structure(out) \
+        == jax.tree_util.tree_structure(state)
+    for leaf in jax.tree_util.tree_leaves(out["clients"]["params"]):
+        arr = np.asarray(leaf, np.float32)
+        assert np.isfinite(arr).all()
+        for c in range(1, n):
+            np.testing.assert_array_equal(arr[0], arr[c])
+
+
+def test_async_and_compiled_model_codec_consistency():
+    """The three execution paths (per-round loop, compiled chunks, event
+    engine at zero latency) aggregate through the SAME coded model-sync
+    wire: identical quantization keys => identical trained states
+    (bitwise for run vs run_compiled, fp-tol for the async engine)."""
+    n, h, rounds = 2, 2, 4
+    bundle, fed = _setup(n=n)
+    fsl = FSLConfig(num_clients=n, h=h, lr=0.05, model_codec="int8")
+
+    loop = Trainer(bundle, fsl, donate=False)
+    s_loop, _ = loop.run(loop.init(0), FederatedBatcher(fed, 8, h, seed=0),
+                         rounds)
+    comp = Trainer(bundle, fsl, donate=False)
+    s_comp, _ = comp.run_compiled(comp.init(0),
+                                  FederatedBatcher(fed, 8, h, seed=0),
+                                  rounds, chunk=2)
+    assert _leaves_equal(s_loop, s_comp)
+    asyn = AsyncTrainer(bundle, fsl, latency=ConstantLatency(0.0, 0.0, 0.0))
+    s_async, _ = asyn.run(asyn.init(0), FederatedBatcher(fed, 8, h, seed=0),
+                          rounds)
+    for a, b in zip(jax.tree_util.tree_leaves(s_loop),
+                    jax.tree_util.tree_leaves(s_async)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# One time model, two engines
+# ---------------------------------------------------------------------------
+
+
+def test_sync_estimate_matches_async_barrier_counterfactual():
+    """Trainer.wallclock_estimate and the async engine's synchronous
+    counterfactual (AsyncStats.sync_time) implement the SAME barrier
+    formula: constant compute + uniform links => the two agree to float
+    tolerance."""
+    n, h, rounds, compute, server_time = 2, 2, 4, 0.7, 0.05
+    bundle, fed = _setup(n=n)
+    fsl = FSLConfig(num_clients=n, h=h, lr=0.05)
+    net = UniformNetwork(up_mbps=2.0, down_mbps=10.0, rtt=0.03)
+    cm = _cost_model(bundle, n)
+
+    asyn = AsyncTrainer(bundle, fsl,
+                        latency=ConstantLatency(compute, 0.0, 0.0),
+                        network=net, server_time=server_time)
+    asyn.run(asyn.init(0), FederatedBatcher(fed, 8, h, seed=0), rounds)
+
+    tr = Trainer(bundle, fsl, donate=False)
+    batch = FederatedBatcher(fed, 8, h, seed=0).next_round()
+    est = tr.wallclock_estimate(cm, 8, rounds, net, batch=batch,
+                                compute=compute, server_time=server_time)
+    assert est.agg_events == rounds          # C=h: one FedAvg per round
+    np.testing.assert_allclose(est.total, asyn.stats.sync_time, rtol=1e-9)
+    np.testing.assert_allclose(est.model_sync_time,
+                               asyn.stats.model_sync_time, rtol=1e-9)
+
+
+def test_sync_estimate_agg_count_h_gt_C():
+    """h > agg_every: a round can cross several C-thresholds but both
+    engines fire at most ONE aggregation per round — the estimator must
+    count crossing *rounds*, not crossings (regression: it used to bill
+    h/C aggregations per round)."""
+    n, h, C, rounds, compute, server_time = 2, 4, 2, 4, 0.2, 0.05
+    bundle, fed = _setup(n=n)
+    fsl = FSLConfig(num_clients=n, h=h, agg_every=C, lr=0.05)
+    net = UniformNetwork(up_mbps=2.0, down_mbps=10.0, rtt=0.03)
+    asyn = AsyncTrainer(bundle, fsl,
+                        latency=ConstantLatency(compute, 0.0, 0.0),
+                        network=net, server_time=server_time)
+    asyn.run(asyn.init(0), FederatedBatcher(fed, 8, h, seed=0), rounds)
+    tr = Trainer(bundle, fsl, donate=False)
+    batch = FederatedBatcher(fed, 8, h, seed=0).next_round()
+    est = tr.wallclock_estimate(_cost_model(bundle, n), 8, rounds, net,
+                                batch=batch, compute=compute,
+                                server_time=server_time)
+    assert est.agg_events == rounds
+    np.testing.assert_allclose(est.total, asyn.stats.sync_time, rtol=1e-9)
+
+
+def test_sync_estimate_requires_batch_for_coded_transport():
+    """A batch-less estimate with a non-identity uplink codec would
+    silently use uncompressed payload sizes — it must refuse instead."""
+    n = 2
+    bundle, _ = _setup(n=n)
+    fsl = FSLConfig(num_clients=n, h=2, lr=0.05, codec="int8")
+    tr = Trainer(bundle, fsl, donate=False)
+    with pytest.raises(ValueError, match="needs a `batch`"):
+        tr.wallclock_estimate(_cost_model(bundle, n), 8, 2,
+                              UniformNetwork())
+
+
+def test_unit_key_legacy_stream_frozen():
+    """The uplink/downlink codec keys (salts 0/1) keep the pre-model-sync
+    ``fold_in(PRNGKey(seed), unit * 2 + salt)`` derivation — coded runs
+    from before the model-sync wire reproduce bitwise — and the
+    model-sync salts 2/3 land on a disjoint stream."""
+    tp = make_transport("int8", model_sync="int8", seed=7)
+    legacy = lambda u, s: jax.random.fold_in(jax.random.PRNGKey(7),
+                                             u * 2 + s)
+    keys = set()
+    for unit in (0, 1, 5):
+        for salt in (0, 1):
+            k = tp.unit_key(unit, salt=salt)
+            np.testing.assert_array_equal(np.asarray(k),
+                                          np.asarray(legacy(unit, salt)))
+            keys.add(tuple(np.asarray(k).tolist()))
+        for salt in (2, 3):
+            keys.add(tuple(np.asarray(tp.unit_key(unit,
+                                                  salt=salt)).tolist()))
+    assert len(keys) == 3 * 4           # all (unit, salt) keys distinct
+
+
+def test_resolve_transport_string_keeps_model_codec():
+    """Trainer(transport=\"int8\") with fsl.model_codec set must not drop
+    the model-sync codec (regression: the string branch built an
+    all-identity model wire)."""
+    n = 2
+    bundle, _ = _setup(n=n)
+    fsl = FSLConfig(num_clients=n, h=2, lr=0.05, model_codec="int8")
+    tr = Trainer(bundle, fsl, donate=False, transport="int8")
+    assert tr.transport.uplink.name == "int8"
+    assert tr.transport.model_up.name == "int8"
+    assert tr.transport.model_down.name == "int8"
+    assert not tr.transport.model_identity
+
+
+def test_sync_estimate_blocking_method():
+    """Blocking methods bill the gradient download too, in both the
+    estimator and the async counterfactual."""
+    n, h, rounds, compute, server_time = 2, 1, 2, 0.3, 0.02
+    bundle, fed = _setup(n=n)
+    fsl = FSLConfig(num_clients=n, h=h, lr=0.05, method="fsl_oc",
+                    grad_clip=1.0)
+    net = UniformNetwork(up_mbps=4.0, down_mbps=8.0, rtt=0.01)
+    cm = _cost_model(bundle, n)
+    asyn = AsyncTrainer(bundle, fsl,
+                        latency=ConstantLatency(compute, 0.0, 0.0),
+                        network=net, server_time=server_time)
+    asyn.run(asyn.init(0), FederatedBatcher(fed, 8, h, seed=0), rounds)
+    tr = Trainer(bundle, fsl, donate=False)
+    batch = FederatedBatcher(fed, 8, h, seed=0).next_round()
+    est = tr.wallclock_estimate(cm, 8, rounds, net, batch=batch,
+                                compute=compute, server_time=server_time)
+    np.testing.assert_allclose(est.total, asyn.stats.sync_time, rtol=1e-9)
+    assert est.comm_time > 0.0
