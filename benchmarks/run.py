@@ -13,7 +13,7 @@ import time
 import traceback
 
 from benchmarks import fig6_async_order, fig9_codec_tradeoff, \
-    fig45_convergence, fig78_aux_arch, fig_wallclock, perf_bench, \
+    fig45_convergence, fig78_aux_arch, fig_sched, fig_wallclock, perf_bench, \
     roofline_report, table2_comm_storage, table5_tradeoff, table34_aux_params
 
 SUITES = [
@@ -24,6 +24,7 @@ SUITES = [
     ("fig78_aux_arch", fig78_aux_arch.main),
     ("fig9_codec_tradeoff", fig9_codec_tradeoff.main),
     ("fig_wallclock", fig_wallclock.main),
+    ("fig_sched", fig_sched.main),
     ("table5_tradeoff", table5_tradeoff.main),
     ("perf_bench", perf_bench.main),
     ("roofline_report", roofline_report.main),

@@ -23,6 +23,7 @@ from repro.core.async_trainer import AsyncTrainer, make_latency
 from repro.core.bundle import cnn_bundle
 from repro.core.methods import available_methods
 from repro.network import NETWORK_MODELS, network_from_flags
+from repro.sched import available_policies, scheduler_from_flags
 from repro.transport import available_codecs
 from repro.data import FederatedBatcher, partition_iid, \
     synthetic_classification
@@ -50,8 +51,9 @@ def run(args, latency_seed: int):
     if not network.is_ideal:
         # a real network owns all transfer time; latency narrows to compute
         latency = latency.compute_only()
+    scheduler = scheduler_from_flags(args.scheduler, args.deadline_s)
     trainer = AsyncTrainer(bundle, fsl, latency=latency, network=network,
-                           seed=latency_seed)
+                           scheduler=scheduler, seed=latency_seed)
     state = trainer.init(args.seed)
     batcher = FederatedBatcher(fed, 20, args.h, seed=1)
     state, history = trainer.run(state, batcher, args.rounds,
@@ -59,7 +61,7 @@ def run(args, latency_seed: int):
     xt, yt = synthetic_classification(400, CIFAR10.in_shape, 10, seed=9,
                                       signal=12.0)
     acc = accuracy(trainer.merged_params(state), xt, yt)
-    return acc, history, trainer.stats
+    return acc, history, trainer
 
 
 def main():
@@ -86,15 +88,26 @@ def main():
     ap.add_argument("--bandwidth-mbps", type=float, default=10.0,
                     help="mean uplink rate for --network uniform/lognormal/"
                          "trace (downlink 5x; tiered has per-tier rates)")
+    ap.add_argument("--scheduler", default="wait_all",
+                    choices=list(available_policies()),
+                    help="aggregation-barrier scheduling policy (wait_all "
+                         "= legacy everyone-participates barrier, bitwise)")
+    ap.add_argument("--deadline-s", type=float, default=30.0,
+                    help="per-round wall-clock budget for --scheduler "
+                         "deadline; late arrivals are dropped and FedAvg "
+                         "renormalizes over the participants")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    acc1, hist, stats = run(args, latency_seed=1)
+    acc1, hist, trainer = run(args, latency_seed=1)
+    stats = trainer.stats
     for row in hist:
         keys = [k for k in row if k not in ("round", "aggregated")]
         print(f"round {row['round']:3d}  " +
-              "  ".join(f"{k}={row[k]:.4f}" for k in keys))
+              "  ".join(f"{k}={row[k]:.4f}" if isinstance(row[k], float)
+                        else f"{k}={row[k]}" for k in keys))
     acc2, _, _ = run(args, latency_seed=2)
+    participation = trainer.participation_summary()
     print(f"\narrival order A: top-1 = {acc1:.3f}")
     print(f"arrival order B: top-1 = {acc2:.3f}   "
           f"(|diff| = {abs(acc1 - acc2):.3f} — Fig. 6: order-insensitive)")
@@ -106,6 +119,11 @@ def main():
     if args.network != "ideal":
         print(f"network ({args.network}): transfer {s['comm_time']:.1f}s, "
               f"model sync {s['model_sync_time']:.1f}s of the async total")
+    if participation is not None:
+        print(f"scheduler {args.scheduler!r}: mean cohort "
+              f"{participation['mean_cohort']}/{args.clients}, "
+              f"dropped {s['dropped']} late / skipped {s['skipped']} "
+              f"planned-out uploads")
     assert np.isfinite(acc1) and np.isfinite(acc2)
     if args.rounds >= 10:        # short smoke runs are too noisy to compare
         assert abs(acc1 - acc2) < 0.08, (acc1, acc2)

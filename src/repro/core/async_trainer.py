@@ -46,6 +46,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Union
 
 import jax
@@ -204,13 +205,18 @@ def make_latency(name: str, **kw) -> LatencyModel:
 class AsyncStats:
     """Straggler / idle-time accounting for one ``AsyncTrainer.run``."""
     rounds: int = 0
-    events: int = 0                 # server-consumed uploads
+    events: int = 0                 # server-consumed (admitted) uploads
     async_time: float = 0.0         # event-driven wall clock
     sync_time: float = 0.0          # synchronous-barrier counterfactual
     server_busy: float = 0.0        # shared-server service time
     client_wait: float = 0.0        # blocking methods: time spent waiting
     comm_time: float = 0.0          # network transfer seconds (all events)
     model_sync_time: float = 0.0    # aggregation model up/download seconds
+    # scheduling (all zero / empty under the default wait_all barrier):
+    dropped: int = 0                # uploads past the deadline, not consumed
+    skipped: int = 0                # client-rounds the plan sat out
+    # per aggregation event: how many clients the barrier admitted
+    agg_participants: List[int] = dataclasses.field(default_factory=list)
     # client ids in first-round consumption order (the Fig. 6 permutation)
     arrival_order: List[int] = dataclasses.field(default_factory=list)
 
@@ -231,6 +237,9 @@ class AsyncStats:
                 "client_wait": self.client_wait,
                 "comm_time": self.comm_time,
                 "model_sync_time": self.model_sync_time,
+                "dropped": self.dropped, "skipped": self.skipped,
+                "min_participants": min(self.agg_participants)
+                if self.agg_participants else None,
                 "speedup": self.speedup}
 
 
@@ -280,8 +289,14 @@ class AsyncTrainer:
     # per client before it enters the arrival queue, replies before the
     # client receives them — the same boundary the sync assembly codes.
     transport: Optional[Any] = None
+    # scheduling: None/"wait_all" keeps the legacy wait-for-everyone
+    # barrier (bitwise-identical event schedule); a policy name or
+    # repro.sched.SchedulerPolicy makes the policy decide which arrivals
+    # each aggregation admits (plan-level skips + per-round deadline).
+    scheduler: Optional[Any] = None
 
     def __post_init__(self):
+        from repro.sched import resolve_policy
         from repro.transport import resolve_transport
         m = self.method if self.method is not None else self.fsl.method
         if isinstance(m, str):
@@ -300,9 +315,22 @@ class AsyncTrainer:
                 and not self.transport.downlink.is_identity) else None
         self._agg_fn = jax.jit(
             m.make_wire_aggregate(self.fsl, transport=self.transport))
+        self.scheduler = resolve_policy(self.scheduler)
+        if not self.scheduler.is_wait_all:
+            self._magg_fn = jax.jit(m.make_wire_aggregate(
+                self.fsl, transport=self.transport, participation=True,
+                refresh=self.scheduler.refresh_dropped))
         self._stacked_keys = ("clients",) if self.hooks.server_shared \
             else ("clients", self.hooks.server_key)
+        self._sched_ctx = self._sched_plan = None
         self.stats = AsyncStats()
+
+    def participation_summary(self):
+        """The scheduler policy's summary of the realized plan (None until
+        a scheduled run has drawn one, and for wait_all)."""
+        if self._sched_plan is None:
+            return None
+        return self.scheduler.summary(self._sched_ctx, self._sched_plan)
 
     # -- facade parity with Trainer -----------------------------------------
     def init(self, seed: int = 0):
@@ -367,6 +395,18 @@ class AsyncTrainer:
         ``trace`` overrides the compute-latency trace and ``net_trace``
         the link-weather trace — pass the same traces to two runs to
         replay identical wall-clock conditions.
+
+        With a non-wait_all ``scheduler`` the aggregation barrier admits
+        only what the policy allows: plan-skipped clients sit the round
+        out (or train locally without uploading, per the policy's
+        ``local_when_skipped``), arrivals past the policy's per-round
+        wall-clock budget are dropped unconsumed, and FedAvg runs masked
+        and renormalized over the surviving participants (empty cohort:
+        warned no-op).  History rows gain ``participants`` /
+        ``dropped_updates`` / ``skipped_updates`` columns and
+        ``AsyncStats`` the matching totals; per-round uplink metering and
+        the model-sync barrier charge only the clients that actually hit
+        the wire.
         """
         fsl, hooks = self.fsl, self.hooks
         n, K = fsl.num_clients, hooks.uploads_per_round
@@ -393,6 +433,14 @@ class AsyncTrainer:
                                  f"!= {(num_rounds, n, K)}")
         zeros = np.zeros((n, K))
         up_bytes = down_bytes = ms_up = ms_down = None
+        sched = self.scheduler
+        sched_active = not sched.is_wait_all
+        plan = None
+        ctx = None
+        # participation carry: a client enters an aggregation only if it
+        # was admitted (not skipped, not dropped) in EVERY round since the
+        # previous one — the intersection a multi-round C window implies
+        part = np.ones(n, bool) if sched_active else None
         self.stats = AsyncStats()
         slices, shared = self._split(state)
         history = []
@@ -403,9 +451,11 @@ class AsyncTrainer:
                 batch_size = jax.tree_util.tree_leaves(batch[1])[0].shape[2]
                 profile = self.comm_profile(cost_model, batch_size,
                                             batch=batch)
-            if not ideal and up_bytes is None:
+            if (not ideal or sched_active) and up_bytes is None:
                 # per-event payload sizes are static per run: the coded
                 # wire bytes of one upload unit / reply / model sync
+                # (the scheduler's plan and partial model-sync metering
+                # need them even under the ideal network)
                 up_spec, reply_spec = self.method.payload_specs(
                     self.bundle, fsl, batch)
                 up_bytes = self.transport.uplink_payload_bytes(up_spec)
@@ -414,44 +464,110 @@ class AsyncTrainer:
                 mspec = self.method.model_sync_specs(self.bundle, fsl)
                 ms_up = self.transport.model_up_wire_bytes(mspec)
                 ms_down = self.transport.model_down_wire_bytes(mspec)
+            if sched_active and plan is None:
+                from repro.sched import SchedContext
+                ctx = SchedContext(
+                    fsl=fsl, network=self.network, up_bytes=up_bytes,
+                    down_bytes=down_bytes,
+                    blocking=self._receive_fn is not None,
+                    uploads_per_round=K)
+                plan = np.asarray(sched.plan(ctx, rnd0 + num_rounds), bool)
+                if plan.shape != (rnd0 + num_rounds, n):
+                    raise ValueError(f"scheduler plan shape {plan.shape} "
+                                     f"!= {(rnd0 + num_rounds, n)}")
+                self._sched_ctx, self._sched_plan = ctx, plan
             if ideal:
                 xu = xd = zeros
             else:
                 xu = net_trace.up_seconds(up_bytes, r)
                 xd = net_trace.down_seconds(down_bytes, r)
             lr = self.lr_at(rnd0 + r)
+            skip = budget = None
+            skipped0 = self.stats.skipped
+            if sched_active:
+                skip = ~plan[rnd0 + r]
+                budget = sched.round_budget(ctx, rnd0 + r)
             shared, metrics = self._run_round(
                 slices, shared, batch, lr, trace.compute[r], trace.up[r],
-                trace.down[r], xu, xd, unit0=round_val)
+                trace.down[r], xu, xd, unit0=round_val, skip=skip,
+                budget=budget, part=part)
             self.stats.rounds += 1
             round_val += K
             if profile is not None:
-                meter.log("uplink_smashed", profile.wire_uplink_smashed)
-                meter.log("uplink_labels", profile.uplink_labels)
-                meter.log("downlink_grads", profile.wire_downlink_grads)
+                if sched_active:
+                    # only the clients that actually uploaded hit the wire
+                    # (dropped arrivals were sent — and count — but the
+                    # plan-skipped clients never launched)
+                    live = n - (self.stats.skipped - skipped0)
+                    for field, total in (
+                            ("uplink_smashed", profile.wire_uplink_smashed),
+                            ("uplink_labels", profile.uplink_labels),
+                            ("downlink_grads", profile.wire_downlink_grads)):
+                        meter.log(field, (total // n) * live)
+                else:
+                    meter.log("uplink_smashed", profile.wire_uplink_smashed)
+                    meter.log("uplink_labels", profile.uplink_labels)
+                    meter.log("downlink_grads", profile.wire_downlink_grads)
             aggregated = cadence.advance(fsl.h)
+            row_part = int(part.sum()) if sched_active else n
             if aggregated:
                 state = self._join(state, slices, shared, round_val)
-                state = self._agg_fn(state)
+                if sched_active:
+                    k = int(part.sum())
+                    self.stats.agg_participants.append(k)
+                    if k == 0:
+                        warnings.warn(
+                            f"scheduler {sched.name!r} admitted no clients "
+                            f"at the round-{rnd0 + r + 1} aggregation; "
+                            "FedAvg skipped (no-op)")
+                    else:
+                        state = self._magg_fn(
+                            state, jnp.asarray(part, jnp.float32))
+                else:
+                    state = self._agg_fn(state)
                 slices, shared = self._split(state)
                 if not ideal:
                     # each client ships its coded model up and pulls the
                     # coded average down, concurrently across the fleet —
                     # the barrier is the slowest link of the round's tail
-                    secs = float(np.max(
-                        ms_up / net_trace.up_bps[r, :, -1]
-                        + ms_down / net_trace.down_bps[r, :, -1]
-                        + 2.0 * net_trace.rtt[r, :, -1]))
+                    if sched_active:
+                        recv = np.ones(n, bool) if sched.refresh_dropped \
+                            else part
+                        per = (np.where(part,
+                                        ms_up / net_trace.up_bps[r, :, -1]
+                                        + net_trace.rtt[r, :, -1], 0.0)
+                               + np.where(recv,
+                                          ms_down
+                                          / net_trace.down_bps[r, :, -1]
+                                          + net_trace.rtt[r, :, -1], 0.0))
+                        secs = float(per.max()) if k else 0.0
+                    else:
+                        secs = float(np.max(
+                            ms_up / net_trace.up_bps[r, :, -1]
+                            + ms_down / net_trace.down_bps[r, :, -1]
+                            + 2.0 * net_trace.rtt[r, :, -1]))
                     self.stats.async_time += secs
                     self.stats.sync_time += secs
                     self.stats.model_sync_time += secs
                 if profile is not None:
-                    meter.log("model_sync", profile.wire_model_sync)
+                    if sched_active:
+                        recv_n = n if sched.refresh_dropped else k
+                        meter.log("model_sync",
+                                  0 if k == 0
+                                  else k * ms_up + recv_n * ms_down)
+                    else:
+                        meter.log("model_sync", profile.wire_model_sync)
+                if sched_active:
+                    part[:] = True
             if log_every and (r + 1) % log_every == 0:
                 m = {k: float(v) for k, v in metrics.items()}
                 row: dict = {"round": rnd0 + r + 1, **m,
                              "aggregated": aggregated,
                              "sim_time": self.stats.async_time}
+                if sched_active:
+                    row["participants"] = row_part
+                    row["dropped_updates"] = self.stats.dropped
+                    row["skipped_updates"] = self.stats.skipped
                 if meter is not None:
                     row["comm_bytes"] = meter.total
                 history.append(row)
@@ -463,7 +579,7 @@ class AsyncTrainer:
     def _run_round(self, slices: List[Dict[str, Any]], shared, batch,
                    lr: float, comp: np.ndarray, up: np.ndarray,
                    down: np.ndarray, xu: np.ndarray, xd: np.ndarray,
-                   unit0: int = 0):
+                   unit0: int = 0, skip=None, budget=None, part=None):
         """One global round of the event simulation: client transactions
         feed a priority queue of upload arrivals; the server services them
         in arrival order (FIFO on ties, so zero latency reproduces the
@@ -473,10 +589,20 @@ class AsyncTrainer:
         per-event ``up``/``down`` base latencies.  ``unit0`` is the
         absolute upload-unit counter at round entry (= ``state["round"]``),
         salting the stochastic codec keys the same way the sync assembly
-        does.  Returns (shared', mean metrics)."""
+        does.  Returns (shared', mean metrics).
+
+        Scheduling operands (all None under wait_all — the code below then
+        reduces line for line to the legacy barrier): ``skip`` is a bool
+        [n] plan mask of clients sitting the round out (they still train
+        locally, upload discarded, when the policy says
+        ``local_when_skipped`` and the method is non-blocking); ``budget``
+        a wall-clock deadline past which popped arrivals are dropped
+        unconsumed; ``part`` the caller's running participation mask,
+        AND-ed with this round's outcome in place."""
         hooks, st = self.hooks, self.stats
         n, K = len(slices), hooks.uploads_per_round
         blocking = self._receive_fn is not None
+        active = np.ones(n, bool)       # counted in this round's barrier
 
         def _codec_key(k: int, c: int, salt: int):
             return self.transport.unit_key(unit0 + k, client=c, salt=salt)
@@ -509,6 +635,22 @@ class AsyncTrainer:
             next_k[c] = k + 1
 
         for c in range(n):
+            if skip is not None and skip[c]:
+                st.skipped += 1
+                if part is not None:
+                    part[c] = False
+                if self.scheduler.local_when_skipped and not blocking:
+                    # extra local epochs, no upload: run the client's
+                    # compute for every unit but discard the payloads
+                    for k in range(K):
+                        cslice, _, _, m = self._compute_fn(
+                            slices[c], _unit_batch(batch, c, k, hooks), lr)
+                        slices[c] = cslice
+                        tally(m)
+                        client_t[c] += float(comp[c, k])
+                else:
+                    active[c] = False   # idle: contributes no round time
+                continue
             if blocking:
                 launch(c)           # next unit only after the reply lands
             else:
@@ -518,8 +660,18 @@ class AsyncTrainer:
         server_free = 0.0
         replica_free = [0.0] * n
         t_end = 0.0
+        dropped_any = False
         while heap:
             t_arrive, _, c, k, upload, pending = heapq.heappop(heap)
+            if budget is not None and t_arrive > budget:
+                # past the deadline: the upload was sent but the barrier
+                # does not wait for (or consume) it — partial aggregation
+                st.dropped += 1
+                dropped_any = True
+                active[c] = False
+                if part is not None:
+                    part[c] = False
+                continue
             if st.rounds == 0:
                 st.arrival_order.append(c)
             free = server_free if hooks.server_shared else replica_free[c]
@@ -548,7 +700,14 @@ class AsyncTrainer:
                 if next_k[c] < K:
                     launch(c)
 
-        st.async_time += max([t_end] + client_t)
+        # round wall-clock: the server's last service and the local clocks
+        # of the clients the barrier waited for; a deadline round lasts at
+        # least the budget (the server waited that long before cutting).
+        round_time = max([t_end] + [client_t[c] for c in range(n)
+                                    if active[c]])
+        if dropped_any and budget is not None:
+            round_time = max(round_time, budget)
+        st.async_time += round_time
         # barrier counterfactual: every upload unit waits for the slowest
         # client (compute + base latency + network transfer), then the
         # server drains all n uploads back to back.

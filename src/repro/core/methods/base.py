@@ -248,7 +248,7 @@ def assemble_round_step(hooks: AsyncHooks, fsl: FSLConfig,
 
 
 def make_chunk_step(round_step, aggregate, fsl: FSLConfig,
-                    unit_batches: int):
+                    unit_batches: int, masked_aggregate=None):
     """Fuse a whole chunk of global rounds into one scannable program.
 
     ``Trainer.run`` dispatches one jitted ``round_step`` per round from the
@@ -276,8 +276,44 @@ def make_chunk_step(round_step, aggregate, fsl: FSLConfig,
     return the same state pytree) — true of every registered method's
     FedAvg.  Returns ``chunk_step(state, batches, lrs) -> (state,
     stacked_metrics, agg_mask)``.
+
+    With ``masked_aggregate`` (a scheduling ``aggregate(state, mask)``,
+    see :meth:`FSLMethod.make_masked_aggregate`) the chunk instead takes a
+    per-round participation plan: ``chunk_step(state, batches, lrs, masks,
+    part) -> (state, stacked_metrics, agg_mask, part)``.  ``masks`` is the
+    float ``[R, n]`` plan slice for this chunk and ``part`` the running
+    participation carry — a client participates in an aggregation only if
+    its plan admitted it in EVERY round since the previous aggregation
+    (the intersection a multi-round C-batch window implies), and ``part``
+    threads across chunk boundaries so non-aligned (chunk, C) schedules
+    stay exact.  The ``lax.cond`` fires only when the accumulated cohort
+    is non-empty — an empty cohort is a no-op round (the Trainer warns
+    host-side); ``agg_mask`` still reports the cadence truth so history
+    rows match the per-round loop.
     """
     agg_every = fsl.resolved_agg_every
+
+    if masked_aggregate is not None:
+        def masked_chunk_step(state, batches, lrs, masks, part):
+            def body(carry, xs):
+                st, acc = carry
+                batch, lr, mask = xs
+                prev = st["round"] * unit_batches
+                st, metrics = round_step(st, batch, lr)
+                done = st["round"] * unit_batches
+                aggregated = (done // agg_every) > (prev // agg_every)
+                acc = acc * mask
+                fire = jnp.logical_and(aggregated, jnp.sum(acc) > 0)
+                st = lax.cond(fire, masked_aggregate, lambda s, _: s,
+                              st, acc)
+                acc = jnp.where(aggregated, jnp.ones_like(acc), acc)
+                return (st, acc), (metrics, aggregated)
+
+            (state, part), (metrics, agg_mask) = lax.scan(
+                body, (state, part), (batches, lrs, masks))
+            return state, metrics, agg_mask, part
+
+        return masked_chunk_step
 
     def chunk_step(state, batches, lrs):
         def body(st, xs):
@@ -310,6 +346,11 @@ class FSLMethod:
     downloads_gradients: bool = True    # True: cut-layer grads per batch
     server_replicated: bool = False     # True: one server copy per client
     has_aux: bool = False               # True: auxiliary head on clients
+    # The stacked state subtrees make_aggregate FedAvgs (server-replicated
+    # methods average their replicas too); make_masked_aggregate mirrors
+    # exactly this set, so masked and plain aggregation touch the same
+    # state.
+    agg_keys: tuple = ("clients",)
 
     # -- training ----------------------------------------------------------
     def init_state(self, bundle: SplitModelBundle, fsl: FSLConfig,
@@ -333,25 +374,55 @@ class FSLMethod:
 
     def make_chunk_step(self, bundle: SplitModelBundle, fsl: FSLConfig,
                         server_constraint: Optional[Callable] = None,
-                        transport=None):
+                        transport=None, participation: bool = False,
+                        refresh: bool = True):
         """Returns ``chunk_step(state, batches, lrs) -> (state, metrics,
         agg_mask)`` fusing a whole chunk of rounds (stacked on a new
         leading axis) into one scanned program — see :func:`make_chunk_step`.
         Composes with per-method ``make_round_step`` overrides (e.g.
         CSE-FSL's fused batched server update) automatically, since the
-        scanned body IS the method's round step."""
+        scanned body IS the method's round step.
+
+        ``participation=True`` builds the scheduling variant instead:
+        ``chunk_step(state, batches, lrs, masks, part)`` threading a
+        per-round participation plan into the in-scan FedAvg ``lax.cond``
+        (masked, renormalized, empty-cohort no-op)."""
         round_step = self.make_round_step(bundle, fsl,
                                           server_constraint=server_constraint,
                                           transport=transport)
+        magg = self.make_wire_aggregate(fsl, transport=transport,
+                                        participation=True,
+                                        refresh=refresh) \
+            if participation else None
         return make_chunk_step(round_step,
                                self.make_wire_aggregate(fsl,
                                                         transport=transport),
-                               fsl, self.unit_batches(fsl))
+                               fsl, self.unit_batches(fsl),
+                               masked_aggregate=magg)
 
     def make_aggregate(self):
         raise NotImplementedError
 
-    def make_wire_aggregate(self, fsl: FSLConfig, transport=None):
+    def make_masked_aggregate(self, refresh: bool = True):
+        """Participation-aware FedAvg: ``aggregate(state, mask)`` averages
+        the :attr:`agg_keys` subtrees over the clients a float ``[n]``
+        participation mask admits, weights renormalized over the
+        participants (:func:`fedavg_masked`).  ``refresh`` decides whether
+        non-participants receive the cohort average or keep their local
+        state.  Callers guard the empty mask (host-side warning + no-op in
+        the trainers, an in-graph predicate in the compiled chunk)."""
+        keys = self.agg_keys
+
+        def aggregate(state, mask):
+            return {**state, **{k: fedavg_masked(state[k], mask,
+                                                 refresh=refresh)
+                                for k in keys}}
+
+        return aggregate
+
+    def make_wire_aggregate(self, fsl: FSLConfig, transport=None,
+                            participation: bool = False,
+                            refresh: bool = True):
         """Aggregation with the model-sync wire made explicit: before
         FedAvg each client's model subtree (``state["clients"]["params"]``
         — what :meth:`merged_params` deploys and what Table II's
@@ -367,10 +438,18 @@ class FSLMethod:
         aggregation.  Both engines and the compiled chunk runner route
         aggregation through this wrapper, so quantized model sync shows up
         identically in all three execution paths (key salts 2/3 of
-        ``Transport.unit_key``)."""
+        ``Transport.unit_key``).
+
+        ``participation=True`` returns the scheduling variant
+        ``aggregate(state, mask)`` instead (:meth:`make_masked_aggregate`
+        behind the same model-sync wire): only the mask's participants
+        upload their coded model and enter the renormalized average, and
+        ``refresh`` decides whether non-participants download the coded
+        average or keep their local params."""
         from repro.transport import resolve_transport
         tp = resolve_transport(transport, fsl)
-        agg = self.make_aggregate()
+        agg = self.make_masked_aggregate(refresh=refresh) if participation \
+            else self.make_aggregate()
         if tp.model_identity:
             return agg
         n = fsl.num_clients
@@ -379,11 +458,45 @@ class FSLMethod:
             return {**state, "clients": {**state["clients"],
                                          "params": params}}
 
-        def aggregate(state):
+        def _coded_up(state):
             params = state["clients"]["params"]
             keys = jax.vmap(jax.random.fold_in, (None, 0))(
                 tp.unit_key(state["round"], salt=2), jnp.arange(n))
-            params = jax.vmap(tp.code_model_up)(params, keys)
+            return jax.vmap(tp.code_model_up)(params, keys)
+
+        if participation:
+            def aggregate(state, mask):
+                coded = _coded_up(state)
+                st = agg(_with_params(state, coded), mask)
+                # the renormalized average of the participants' CODED
+                # params, computed explicitly (with refresh=False the
+                # stacked rows are no longer identical, so the
+                # code-row-0-and-broadcast trick below does not apply)
+                w = (mask / jnp.maximum(jnp.sum(mask), 1.0)).astype(
+                    jnp.float32)
+                avg = jax.tree_util.tree_map(
+                    lambda x: jnp.tensordot(w, x.astype(jnp.float32),
+                                            axes=1), coded)
+                avg = tp.code_model_down(avg,
+                                         tp.unit_key(state["round"], salt=3))
+                sel = mask > 0
+
+                def place(d, x, orig):
+                    b = jnp.broadcast_to(d, x.shape).astype(x.dtype)
+                    if refresh:
+                        return b
+                    s = sel.reshape((-1,) + (1,) * (x.ndim - 1))
+                    return jnp.where(s, b, orig)
+
+                params = jax.tree_util.tree_map(
+                    place, avg, st["clients"]["params"],
+                    state["clients"]["params"])
+                return _with_params(st, params)
+
+            return aggregate
+
+        def aggregate(state):
+            params = _coded_up(state)
             state = agg(_with_params(state, params))
             # post-FedAvg the stacked clients are identical: code the
             # average once and broadcast the same coded copy to all n
@@ -546,6 +659,30 @@ def fedavg(tree):
     def avg(x):
         m = jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True)
         return jnp.broadcast_to(m, x.shape).astype(x.dtype)
+    return jax.tree_util.tree_map(avg, tree)
+
+
+def fedavg_masked(tree, mask, refresh: bool = True):
+    """Partial-aggregation FedAvg: average over the clients ``mask`` admits,
+    with the weights renormalized to sum to 1 over the participants (the
+    FedLite partial-participation rule, arXiv 2201.11865).
+
+    ``mask`` is a float ``[n]`` vector of 0/1 participation flags.  With
+    ``refresh=True`` the participants' average is broadcast to every client
+    (dropped clients are refreshed with the new global model); with
+    ``refresh=False`` non-participants keep their own state bitwise and
+    fold in at their next participating round.  Callers must guard the
+    all-zero mask (an empty cohort is a scheduling no-op, not a division
+    hazard — the denominator is clamped, but the "average" would be zeros).
+    """
+    def avg(x):
+        w = (mask / jnp.maximum(jnp.sum(mask), 1.0)).astype(jnp.float32)
+        m = jnp.tensordot(w, x.astype(jnp.float32), axes=1)
+        b = jnp.broadcast_to(m, x.shape).astype(x.dtype)
+        if refresh:
+            return b
+        sel = mask.reshape((-1,) + (1,) * (x.ndim - 1)) > 0
+        return jnp.where(sel, b, x)
     return jax.tree_util.tree_map(avg, tree)
 
 

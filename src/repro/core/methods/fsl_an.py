@@ -76,6 +76,7 @@ class FSLAN(FSLMethod):
     downloads_gradients = False
     server_replicated = True
     has_aux = True
+    agg_keys = ("clients", "servers")   # replicas FedAvg too (make_aggregate)
 
     def init_state(self, bundle, fsl, key):
         return init_state(bundle, fsl, key)

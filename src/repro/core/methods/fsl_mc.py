@@ -83,6 +83,7 @@ class FSLMC(FSLMethod):
     downloads_gradients = True
     server_replicated = True
     has_aux = False
+    agg_keys = ("clients", "servers")   # replicas FedAvg too (see above)
 
     def init_state(self, bundle, fsl, key):
         return init_state(bundle, fsl, key)

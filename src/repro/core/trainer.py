@@ -23,6 +23,7 @@ methods consume.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Optional, Union
 
 import jax
@@ -80,14 +81,27 @@ class Trainer:
     # wire codecs: None resolves fsl.codec; a string names an uplink codec;
     # a repro.transport.Transport sets both directions explicitly.
     transport: Optional[Any] = None
+    # scheduling: None/"wait_all" keeps the legacy everyone-participates
+    # barrier (bitwise — no mask machinery is even built); a policy name
+    # or repro.sched.SchedulerPolicy instance gates FedAvg participation
+    # per round.  ``network`` is the NetworkModel the policy plans against
+    # (default: the ideal network, i.e. scheduling on compute alone).
+    scheduler: Optional[Any] = None
+    network: Optional[Any] = None
 
     def __post_init__(self):
+        from repro.sched import resolve_policy
         from repro.transport import resolve_transport
         m = self.method if self.method is not None else self.fsl.method
         if isinstance(m, str):
             m = get_method(m)
         self.method = m
         self.transport = resolve_transport(self.transport, self.fsl)
+        self.scheduler = resolve_policy(self.scheduler)
+        if self.network is None:
+            from repro.network import IdealNetwork
+            self.network = IdealNetwork()
+        self._sched_ctx = self._sched_masks = None
         donate = (0,) if self.donate else ()
         self.step_fn = jax.jit(
             m.make_round_step(self.bundle, self.fsl,
@@ -108,6 +122,22 @@ class Trainer:
                               server_constraint=self.server_constraint,
                               transport=self.transport),
             donate_argnums=donate)
+        # Scheduling (non-wait_all only — the default path above stays the
+        # untouched legacy code): renormalized masked FedAvg plus the
+        # chunk variant that threads the participation plan through the
+        # in-scan lax.cond.
+        if not self.scheduler.is_wait_all:
+            refresh = self.scheduler.refresh_dropped
+            self.masked_agg_fn = jax.jit(
+                m.make_wire_aggregate(self.fsl, transport=self.transport,
+                                      participation=True, refresh=refresh),
+                donate_argnums=donate)
+            self.masked_chunk_fn = jax.jit(
+                m.make_chunk_step(self.bundle, self.fsl,
+                                  server_constraint=self.server_constraint,
+                                  transport=self.transport,
+                                  participation=True, refresh=refresh),
+                donate_argnums=donate)
 
     # -- public per-round API (custom loops, e.g. arrival-order studies) ----
     def init(self, seed: int = 0):
@@ -197,23 +227,69 @@ class Trainer:
             compute=compute, server_time=server_time, agg_events=aggs,
             model_up_bytes=ms_up, model_down_bytes=ms_down)
 
+    # -- scheduling plan ----------------------------------------------------
+    def _plan_schedule(self, batch, horizon: int) -> np.ndarray:
+        """Draw the scheduler's deterministic participation plan for global
+        rounds ``0..horizon-1`` (indexed by the absolute round counter, so
+        a resumed run realizes the same plan).  Payload bytes for the
+        policy's SchedContext come from the method's payload specs through
+        this trainer's transport — codec-effective, like the wall-clock
+        estimate."""
+        from repro.sched import SchedContext
+        m, fsl, tp = self.method, self.fsl, self.transport
+        up_spec, reply_spec = m.payload_specs(self.bundle, fsl, batch)
+        ctx = SchedContext(
+            fsl=fsl, network=self.network,
+            up_bytes=tp.uplink_payload_bytes(up_spec),
+            down_bytes=tp.downlink_payload_bytes(reply_spec)
+            if reply_spec is not None else 0,
+            blocking=m.downloads_gradients,
+            uploads_per_round=fsl.h if m.uploads_every_batch else 1)
+        masks = np.asarray(self.scheduler.plan(ctx, horizon), bool)
+        if masks.shape != (horizon, fsl.num_clients):
+            raise ValueError(f"scheduler plan shape {masks.shape} != "
+                             f"{(horizon, fsl.num_clients)}")
+        self._sched_ctx, self._sched_masks = ctx, masks
+        return masks
+
+    def participation_summary(self):
+        """The scheduler policy's summary of the realized plan (None until
+        a scheduled run has drawn one, and for wait_all)."""
+        if self._sched_masks is None:
+            return None
+        return self.scheduler.summary(self._sched_ctx, self._sched_masks)
+
+    def _model_sync_wire_pair(self):
+        """(up, down) wire bytes of ONE client's model-sync payload — the
+        per-participant costs partial aggregation meters with."""
+        mspecs = self.method.model_sync_specs(self.bundle, self.fsl)
+        return (self.transport.model_up_wire_bytes(mspecs),
+                self.transport.model_down_wire_bytes(mspecs))
+
     # -- shared per-round bookkeeping (run and run_compiled MUST log
     # identically — the bitwise-history contract in tests/test_compiled.py
     # rides on this being one code path) -----------------------------------
     def _log_round(self, rnd, rnd0, aggregated, metrics_fn, profile, meter,
-                   log_every, callback, history, state):
+                   log_every, callback, history, state, extra=None,
+                   model_sync_bytes=None):
         """Meter + history row for one finished (post-aggregation) round.
         ``metrics_fn`` lazily yields the float-cast metrics dict so the
-        per-round loop only fetches device scalars on logged rounds."""
+        per-round loop only fetches device scalars on logged rounds.
+        Scheduling passes participation ``extra`` row fields and the
+        cohort's actual ``model_sync_bytes`` (None: the full-fleet profile
+        value — the wait_all path, byte for byte the legacy meter)."""
         if profile is not None:
             meter.log("uplink_smashed", profile.wire_uplink_smashed)
             meter.log("uplink_labels", profile.uplink_labels)
             meter.log("downlink_grads", profile.wire_downlink_grads)
             if aggregated:
-                meter.log("model_sync", profile.wire_model_sync)
+                meter.log("model_sync", profile.wire_model_sync
+                          if model_sync_bytes is None else model_sync_bytes)
         if log_every and (rnd + 1 - rnd0) % log_every == 0:
             m = metrics_fn()
             row: dict = {"round": rnd + 1, **m, "aggregated": aggregated}
+            if extra:
+                row.update(extra)
             if meter is not None:
                 row["comm_bytes"] = meter.total
             history.append(row)
@@ -236,28 +312,65 @@ class Trainer:
         - with ``meter`` + ``cost_model``, per-round and per-aggregation
           bytes from the method's CommProfile are logged and a
           ``comm_bytes`` running total is added to the history rows; each
-          row also records whether that round ``aggregated``.
+          row also records whether that round ``aggregated``;
+        - with a non-wait_all ``scheduler``, FedAvg runs masked and
+          renormalized over the policy's plan — a client participates in
+          an aggregation only if the plan admitted it in every round since
+          the previous one; an empty cohort is a warned no-op.  Rows on
+          aggregated rounds gain ``participants`` / ``dropped_updates``
+          fields and the model-sync meter charges only the actual cohort.
         """
         start_batches = self.method.batches_trained(self.fsl, state)
         cadence = AggregationCadence(self.fsl.resolved_agg_every,
                                      start_batches)
         rnd0 = start_batches // self.fsl.h
+        n = self.fsl.num_clients
         history = []
         profile = None
+        sched_active = not self.scheduler.is_wait_all
+        masks = ms_pair = None
+        part = np.ones(n, bool) if sched_active else None
+        dropped_updates = 0
         for rnd in range(rnd0, rnd0 + num_rounds):
             batch = batcher.next_round()
             if meter is not None and cost_model is not None and profile is None:
                 batch_size = jax.tree_util.tree_leaves(batch[1])[0].shape[2]
                 profile = self.comm_profile(cost_model, batch_size,
                                             batch=batch)
+            if sched_active and masks is None:
+                masks = self._plan_schedule(batch, rnd0 + num_rounds)
             state, metrics = self.step_fn(state, batch, self.lr_at(rnd))
             aggregated = cadence.advance(self.fsl.h)
+            extra = ms_bytes = None
+            if sched_active:
+                part &= masks[rnd]
             if aggregated:
-                state = self.agg_fn(state)
+                if not sched_active:
+                    state = self.agg_fn(state)
+                else:
+                    k = int(part.sum())
+                    if k == 0:
+                        warnings.warn(
+                            f"scheduler {self.scheduler.name!r} admitted no "
+                            f"clients at the round-{rnd + 1} aggregation; "
+                            "FedAvg skipped (no-op)")
+                    else:
+                        state = self.masked_agg_fn(
+                            state, jnp.asarray(part, jnp.float32))
+                    dropped_updates += n - k
+                    extra = {"participants": k,
+                             "dropped_updates": dropped_updates}
+                    if profile is not None:
+                        if ms_pair is None:
+                            ms_pair = self._model_sync_wire_pair()
+                        recv = n if self.scheduler.refresh_dropped else k
+                        ms_bytes = 0 if k == 0 \
+                            else k * ms_pair[0] + recv * ms_pair[1]
+                    part[:] = True
             self._log_round(rnd, rnd0, aggregated,
                             lambda: {k: float(v) for k, v in metrics.items()},
                             profile, meter, log_every, callback, history,
-                            state)
+                            state, extra=extra, model_sync_bytes=ms_bytes)
         return state, history
 
     # -- the compiled loop --------------------------------------------------
@@ -298,9 +411,16 @@ class Trainer:
                              "(use Trainer.run for the per-round loop)")
         start_batches = self.method.batches_trained(self.fsl, state)
         rnd0 = start_batches // self.fsl.h
+        n = self.fsl.num_clients
         history = []
         profile = None
         done = 0
+        sched_active = not self.scheduler.is_wait_all
+        masks = ms_pair = part_dev = None
+        # host mirror of the in-scan participation carry — same math, so
+        # rows/meter/warnings match Trainer.run exactly
+        part = np.ones(n, bool) if sched_active else None
+        dropped_updates = 0
         while done < num_rounds:
             r = min(chunk, num_rounds - done)
             rounds = [batcher.next_round() for _ in range(r)]
@@ -310,17 +430,50 @@ class Trainer:
                     rounds[0][1])[0].shape[2]
                 profile = self.comm_profile(cost_model, batch_size,
                                             batch=rounds[0])
+            if sched_active and masks is None:
+                masks = self._plan_schedule(rounds[0], rnd0 + num_rounds)
             batches = jax.tree_util.tree_map(_stack_rounds, *rounds)
             lrs = jnp.asarray([self.lr_at(rnd0 + done + i) for i in range(r)],
                               jnp.float32)
-            state, metrics, agg_mask = self.chunk_fn(state, batches, lrs)
+            if sched_active:
+                if part_dev is None:
+                    part_dev = jnp.ones(n, jnp.float32)
+                mk = jnp.asarray(masks[rnd0 + done:rnd0 + done + r],
+                                 jnp.float32)
+                state, metrics, agg_mask, part_dev = self.masked_chunk_fn(
+                    state, batches, lrs, mk, part_dev)
+            else:
+                state, metrics, agg_mask = self.chunk_fn(state, batches, lrs)
             # ONE host fetch per chunk: the stacked metrics + agg mask
             agg_mask = np.asarray(agg_mask)
             metrics = {k: np.asarray(v) for k, v in metrics.items()}
             for i in range(r):
+                rnd = rnd0 + done + i
+                aggregated = bool(agg_mask[i])
+                extra = ms_bytes = None
+                if sched_active:
+                    part &= masks[rnd]
+                    if aggregated:
+                        k = int(part.sum())
+                        if k == 0:
+                            warnings.warn(
+                                f"scheduler {self.scheduler.name!r} admitted "
+                                f"no clients at the round-{rnd + 1} "
+                                "aggregation; FedAvg skipped (no-op)")
+                        dropped_updates += n - k
+                        extra = {"participants": k,
+                                 "dropped_updates": dropped_updates}
+                        if profile is not None:
+                            if ms_pair is None:
+                                ms_pair = self._model_sync_wire_pair()
+                            recv = n if self.scheduler.refresh_dropped else k
+                            ms_bytes = 0 if k == 0 \
+                                else k * ms_pair[0] + recv * ms_pair[1]
+                        part[:] = True
                 self._log_round(
-                    rnd0 + done + i, rnd0, bool(agg_mask[i]),
+                    rnd, rnd0, aggregated,
                     lambda: {k: float(v[i]) for k, v in metrics.items()},
-                    profile, meter, log_every, callback, history, state)
+                    profile, meter, log_every, callback, history, state,
+                    extra=extra, model_sync_bytes=ms_bytes)
             done += r
         return state, history

@@ -30,6 +30,7 @@ from repro.core.bundle import transformer_bundle
 from repro.core.methods import available_methods
 from repro.core.trainer import Trainer
 from repro.network import NETWORK_MODELS, network_from_flags
+from repro.sched import available_policies, scheduler_from_flags
 from repro.transport import available_codecs
 from repro.common import bytes_of, count_params
 from repro.data import FederatedBatcher, partition_dirichlet, partition_iid, \
@@ -99,6 +100,14 @@ def main():
     ap.add_argument("--bandwidth-mbps", type=float, default=10.0,
                     help="mean uplink rate for --network uniform/lognormal/"
                          "trace (downlink 5x; tiered has per-tier rates)")
+    ap.add_argument("--scheduler", default="wait_all",
+                    choices=list(available_policies()),
+                    help="aggregation-barrier scheduling policy (wait_all "
+                         "= legacy everyone-participates barrier, bitwise)")
+    ap.add_argument("--deadline-s", type=float, default=30.0,
+                    help="wall-clock budget per round for "
+                         "--scheduler deadline (arrivals past it are "
+                         "dropped, FedAvg renormalizes over participants)")
     add_size_args(ap)
     ap.add_argument("--non-iid", action="store_true")
     ap.add_argument("--server-update", default="sequential")
@@ -131,7 +140,11 @@ def main():
 
     # One Trainer drives every registered method: the CommProfile of the
     # selected method replaces the old per-method metering branches.
-    trainer = Trainer(bundle, fsl)
+    # The scheduler plans against the selected network's links (wait_all
+    # keeps the legacy barrier and builds no mask machinery at all).
+    network = network_from_flags(args.network, args.bandwidth_mbps)
+    scheduler = scheduler_from_flags(args.scheduler, args.deadline_s)
+    trainer = Trainer(bundle, fsl, scheduler=scheduler, network=network)
     state = trainer.init()
     t0 = time.time()
 
@@ -160,7 +173,6 @@ def main():
     if args.network != "ideal":
         # analytic barrier wall-clock under the selected links — the same
         # time model the AsyncTrainer measures event for event
-        network = network_from_flags(args.network, args.bandwidth_mbps)
         est = trainer.wallclock_estimate(cm, args.batch, args.rounds,
                                          network,
                                          batch=batcher.next_round())
@@ -170,11 +182,17 @@ def main():
               f"({est.comm_time:.1f}s transfer, "
               f"{est.model_sync_time:.1f}s model sync over "
               f"{est.agg_events} aggregations)")
+    participation = trainer.participation_summary()
+    if participation is not None:
+        print(f"scheduler {args.scheduler!r} participation: "
+              f"mean cohort {participation['mean_cohort']}/{fsl.num_clients}"
+              + (f", per tier {participation['tier_participation']}"
+                 if "tier_participation" in participation else ""))
     if args.out:
         with open(args.out, "w") as f:
             json.dump({"args": vars(args), "history": history,
-                       "comm": meter.as_dict(), "wallclock": wallclock}, f,
-                      indent=1)
+                       "comm": meter.as_dict(), "wallclock": wallclock,
+                       "participation": participation}, f, indent=1)
 
 
 if __name__ == "__main__":

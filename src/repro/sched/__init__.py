@@ -1,0 +1,37 @@
+"""repro.sched: network-aware client scheduling for the aggregation barrier.
+
+See :mod:`repro.sched.policy` for the SchedulerPolicy API, the built-in
+policies (wait_all / deadline / bandwidth_h / stratified), and the
+add-your-own-policy recipe (README "Scheduling").
+"""
+from repro.sched.policy import (
+    BandwidthHPolicy,
+    DeadlinePolicy,
+    SchedContext,
+    SchedulerPolicy,
+    StratifiedPolicy,
+    WAIT_ALL,
+    WaitAllPolicy,
+    available_policies,
+    client_tiers,
+    get_policy,
+    register_policy,
+    resolve_policy,
+    scheduler_from_flags,
+)
+
+__all__ = [
+    "BandwidthHPolicy",
+    "DeadlinePolicy",
+    "SchedContext",
+    "SchedulerPolicy",
+    "StratifiedPolicy",
+    "WAIT_ALL",
+    "WaitAllPolicy",
+    "available_policies",
+    "client_tiers",
+    "get_policy",
+    "register_policy",
+    "resolve_policy",
+    "scheduler_from_flags",
+]

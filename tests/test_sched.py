@@ -1,0 +1,402 @@
+"""The repro.sched subsystem: the policy registry and plans, renormalized
+masked FedAvg, the frozen wait-all bitwise contract across all three
+execution engines, deadline partial aggregation (plan- and arrival-level),
+and the participation accounting the drivers print."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FSLConfig
+from repro.core.async_trainer import AsyncTrainer, ConstantLatency, \
+    LognormalLatency
+from repro.core.bundle import cnn_bundle
+from repro.core.methods import get_method
+from repro.core.methods.base import fedavg, fedavg_masked
+from repro.core.trainer import Trainer
+from repro.data import FederatedBatcher, partition_iid, \
+    synthetic_classification
+from repro.models.cnn import CIFAR10
+from repro.network import TieredNetwork, UniformNetwork
+from repro.sched import (WAIT_ALL, BandwidthHPolicy, DeadlinePolicy,
+                         SchedContext, SchedulerPolicy, StratifiedPolicy,
+                         available_policies, get_policy, register_policy,
+                         resolve_policy, scheduler_from_flags)
+
+ALL_METHODS = ("cse_fsl", "fsl_mc", "fsl_oc", "fsl_an")
+
+
+def _setup(n=2, samples=240, seed=0):
+    bundle = cnn_bundle(CIFAR10)
+    x, y = synthetic_classification(samples, CIFAR10.in_shape, 10, seed=seed,
+                                    signal=12.0)
+    return bundle, partition_iid(x, y, n, seed=seed)
+
+
+def _leaves_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+def _ctx(trainer, batch, network):
+    """The SchedContext the trainer itself would build — used to derive a
+    deadline that drops exactly the slow tier of ``network``."""
+    m, fsl, tp = trainer.method, trainer.fsl, trainer.transport
+    up_spec, reply_spec = m.payload_specs(trainer.bundle, fsl, batch)
+    return SchedContext(
+        fsl=fsl, network=network,
+        up_bytes=tp.uplink_payload_bytes(up_spec),
+        down_bytes=tp.downlink_payload_bytes(reply_spec)
+        if reply_spec is not None else 0,
+        blocking=m.downloads_gradients,
+        uploads_per_round=fsl.h if m.uploads_every_batch else 1)
+
+
+def _deadline_between_tiers(trainer, batch, network, compute_s):
+    """T strictly between the slowest analytic per-round time and the
+    next-slowest: drops exactly the slowest tier."""
+    secs = np.sort(DeadlinePolicy(compute_s=compute_s).client_seconds(
+        _ctx(trainer, batch, network)))
+    below = secs[secs < secs[-1] - 1e-9]
+    assert below.size, "network is homogeneous; no tier to drop"
+    return float(0.5 * (below[-1] + secs[-1]))
+
+
+# ---------------------------------------------------------------------------
+# Registry + flag plumbing (the codec-recipe mirror)
+# ---------------------------------------------------------------------------
+
+
+def test_registry_resolve_and_flags():
+    assert set(available_policies()) >= {"wait_all", "deadline",
+                                         "bandwidth_h", "stratified"}
+    assert resolve_policy(None) is WAIT_ALL
+    assert resolve_policy("wait_all") is WAIT_ALL
+    assert WAIT_ALL.is_wait_all
+    inst = DeadlinePolicy(deadline_s=1.0)
+    assert resolve_policy(inst) is inst        # instances pass through
+    with pytest.raises(KeyError, match="unknown scheduler policy"):
+        get_policy("carrier-pigeon")
+    assert scheduler_from_flags("deadline", 7.5).deadline_s == 7.5
+    assert scheduler_from_flags("stratified", 0.0, seed=3).seed == 3
+    assert scheduler_from_flags("bandwidth_h") is get_policy("bandwidth_h")
+
+
+def test_register_policy_recipe():
+    """The README add-your-own-policy recipe: a registered subclass is
+    resolvable by name and drives a plan."""
+    @register_policy
+    class OddRounds(SchedulerPolicy):
+        name = "test_odd_rounds"
+
+        def plan(self, ctx, num_rounds):
+            masks = np.ones((num_rounds, ctx.fsl.num_clients), bool)
+            masks[::2] = False
+            return masks
+
+    assert "test_odd_rounds" in available_policies()
+    ctx = SchedContext(fsl=FSLConfig(num_clients=3, h=2),
+                       network=UniformNetwork())
+    plan = get_policy("test_odd_rounds").plan(ctx, 4)
+    np.testing.assert_array_equal(plan[:, 0], [False, True, False, True])
+    with pytest.raises(ValueError, match="non-empty .name"):
+        register_policy(type("Anon", (SchedulerPolicy,), {}))
+
+
+# ---------------------------------------------------------------------------
+# Renormalized masked FedAvg
+# ---------------------------------------------------------------------------
+
+
+def test_fedavg_masked_renormalizes_over_participants():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 3, 2)),
+                    jnp.float32)
+    tree = {"params": x}
+    mask = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+    out = fedavg_masked(tree, mask)["params"]
+    want = np.mean(np.asarray(x)[[0, 2]], axis=0)   # weights sum to 1
+    for c in range(4):                               # refresh: broadcast
+        np.testing.assert_allclose(np.asarray(out[c]), want, rtol=1e-6)
+    # all-participants mask degrades to plain FedAvg
+    full = fedavg_masked(tree, jnp.ones(4))["params"]
+    np.testing.assert_allclose(np.asarray(full),
+                               np.asarray(fedavg(tree)["params"]),
+                               rtol=1e-6)
+
+
+def test_fedavg_masked_no_refresh_keeps_dropped_rows():
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(3, 5)),
+                    jnp.float32)
+    mask = jnp.asarray([1.0, 1.0, 0.0])
+    out = fedavg_masked({"w": x}, mask, refresh=False)["w"]
+    want = np.mean(np.asarray(x)[:2], axis=0)
+    np.testing.assert_allclose(np.asarray(out[0]), want, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out[1]), want, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(out[2]),
+                                  np.asarray(x[2]))   # bitwise-kept
+
+
+# ---------------------------------------------------------------------------
+# Policy plans (pure, no training)
+# ---------------------------------------------------------------------------
+
+
+def _tiered_ctx(n=8, up_bytes=100_000, h=2):
+    return SchedContext(fsl=FSLConfig(num_clients=n, h=h),
+                        network=TieredNetwork(), up_bytes=up_bytes,
+                        uploads_per_round=1)
+
+
+def test_deadline_plan_drops_slow_tier_analytically():
+    ctx = _tiered_ctx()
+    pol = DeadlinePolicy(compute_s=0.5)
+    secs = pol.client_seconds(ctx)
+    assert secs[0] > secs[-1]                       # 3g slower than wifi
+    tight = DeadlinePolicy(deadline_s=float(np.sort(secs)[-3] + 1e-6),
+                           compute_s=0.5)
+    plan = tight.plan(ctx, 3)
+    assert plan.shape == (3, 8)
+    np.testing.assert_array_equal(plan[0], secs <= tight.deadline_s)
+    assert not plan[:, 0].any() and plan[:, -1].all()   # 3g out, wifi in
+    loose = DeadlinePolicy(deadline_s=float(secs.max() + 1.0), compute_s=0.5)
+    assert loose.plan(ctx, 2).all()                 # everyone makes it
+    assert tight.round_budget(ctx, 0) == tight.deadline_s
+    assert WAIT_ALL.round_budget(ctx, 0) is None
+
+
+def test_bandwidth_h_strides_separate_tiers():
+    ctx = _tiered_ctx()
+    pol = get_policy("bandwidth_h")
+    s = pol.strides(ctx)
+    tiers = [ctx.network.client_tier(c, 8) for c in range(8)]
+    by_tier = {t: s[i] for i, t in enumerate(tiers)}
+    assert by_tier["wifi"] == 1                     # fastest uploads always
+    assert 1 < by_tier["4g"] < by_tier["3g"] <= pol.max_stride
+    plan = pol.plan(ctx, 16)
+    # client c participates exactly every stride_c rounds
+    for c in range(8):
+        np.testing.assert_array_equal(
+            plan[:, c], (np.arange(16) + 1) % s[c] == 0)
+    assert not pol.refresh_dropped and pol.local_when_skipped
+    # infinite-bandwidth fleet: everyone at stride 1
+    inf_ctx = SchedContext(fsl=FSLConfig(num_clients=2, h=2),
+                           network=UniformNetwork(up_mbps=float("inf"),
+                                                  down_mbps=float("inf"),
+                                                  rtt=0.0))
+    assert (pol.strides(inf_ctx) == 1).all()
+
+
+def test_stratified_plan_seeded_and_tier_covering():
+    ctx = _tiered_ctx()
+    pol = StratifiedPolicy(frac=0.5, seed=4)
+    p1, p2 = pol.plan(ctx, 10), pol.plan(ctx, 10)
+    np.testing.assert_array_equal(p1, p2)           # seeded determinism
+    assert not np.array_equal(p1, StratifiedPolicy(frac=0.5,
+                                                   seed=5).plan(ctx, 10))
+    tiers = np.asarray([ctx.network.client_tier(c, 8) for c in range(8)])
+    for r in range(10):
+        for t in ("3g", "4g", "wifi"):              # >=1 client per tier
+            assert p1[r, tiers == t].sum() >= 1
+    assert p1.sum(1).max() < 8                      # a strict cohort
+    # tier-less network: degrades to one fleet-wide stratum
+    flat = SchedContext(fsl=FSLConfig(num_clients=4, h=2),
+                        network=UniformNetwork())
+    pf = pol.plan(flat, 6)
+    assert ((pf.sum(1) >= 1) & (pf.sum(1) <= 4)).all()
+
+
+def test_summary_reports_tier_participation():
+    ctx = _tiered_ctx()
+    pol = DeadlinePolicy(deadline_s=1e9, compute_s=0.5)
+    s = pol.summary(ctx, pol.plan(ctx, 4))
+    assert s["policy"] == "deadline" and s["rounds"] == 4
+    assert s["mean_cohort"] == 8.0 and s["min_cohort"] == 8
+    assert s["tier_participation"] == {"3g": 1.0, "4g": 1.0, "wifi": 1.0}
+    assert s["deadline_s"] == 1e9
+
+
+# ---------------------------------------------------------------------------
+# The frozen wait-all contract: explicit wait_all bitwise-reproduces the
+# scheduler-free build on every engine, for every method
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_wait_all_bitwise_frozen_oracle(method):
+    n, h, rounds = 2, 2, 2
+    bundle, fed = _setup(n=n)
+    fsl = FSLConfig(num_clients=n, h=h, lr=0.05, method=method,
+                    grad_clip=1.0 if method == "fsl_oc" else 0.0)
+
+    loop = Trainer(bundle, fsl, donate=False)       # scheduler-free legacy
+    s_loop, h_loop = loop.run(loop.init(0),
+                              FederatedBatcher(fed, 8, h, seed=0), rounds,
+                              log_every=1)
+    comp = Trainer(bundle, fsl, donate=False, scheduler="wait_all",
+                   network=TieredNetwork())
+    s_comp, h_comp = comp.run_compiled(comp.init(0),
+                                       FederatedBatcher(fed, 8, h, seed=0),
+                                       rounds, chunk=2, log_every=1)
+    assert _leaves_equal(s_loop, s_comp)            # compiled + wait_all
+    assert h_loop == h_comp                         # no participation keys
+    assert comp.participation_summary() is None
+
+    a1 = AsyncTrainer(bundle, fsl, latency=LognormalLatency(), seed=11)
+    sa1, ha1 = a1.run(a1.init(0), FederatedBatcher(fed, 8, h, seed=0),
+                      rounds, log_every=1)
+    a2 = AsyncTrainer(bundle, fsl, latency=LognormalLatency(), seed=11,
+                      scheduler="wait_all")
+    sa2, ha2 = a2.run(a2.init(0), FederatedBatcher(fed, 8, h, seed=0),
+                      rounds, log_every=1)
+    assert _leaves_equal(sa1, sa2)
+    assert ha1 == ha2
+    assert a1.stats.as_dict() == a2.stats.as_dict()
+    assert a2.stats.dropped == 0 and a2.stats.skipped == 0
+
+
+def test_stratified_loop_vs_compiled_bitwise():
+    """The masked machinery keeps the run_compiled contract: the per-round
+    loop and the fused chunk runner realize the SAME stratified plan with
+    bitwise-identical states and history rows (participation included)."""
+    n, h, rounds = 4, 2, 4
+    bundle, fed = _setup(n=n, samples=480)
+    fsl = FSLConfig(num_clients=n, h=h, lr=0.05)
+    sched = StratifiedPolicy(frac=0.5, seed=2)
+
+    loop = Trainer(bundle, fsl, donate=False, scheduler=sched,
+                   network=TieredNetwork())
+    s1, h1 = loop.run(loop.init(0), FederatedBatcher(fed, 8, h, seed=0),
+                      rounds, log_every=1)
+    comp = Trainer(bundle, fsl, donate=False, scheduler=sched,
+                   network=TieredNetwork())
+    s2, h2 = comp.run_compiled(comp.init(0),
+                               FederatedBatcher(fed, 8, h, seed=0),
+                               rounds, chunk=2, log_every=1)
+    assert _leaves_equal(s1, s2)
+    assert h1 == h2
+    assert any(r["participants"] < n for r in h1 if r["aggregated"])
+    assert loop.participation_summary() == comp.participation_summary()
+
+
+# ---------------------------------------------------------------------------
+# Deadline partial aggregation
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_sync_drops_slow_tier_and_renormalizes():
+    """Loop engine on a tiered fleet: the 3g client sits out every round,
+    history carries the participation fields, and the refresh semantics
+    hand the cohort average to everyone (client rows equal after the
+    aggregating round)."""
+    n, h, rounds = 4, 2, 3
+    bundle, fed = _setup(n=n, samples=480)
+    fsl = FSLConfig(num_clients=n, h=h, lr=0.05)
+    net = TieredNetwork()                          # n=4: 3g,4g,4g,wifi
+    probe = Trainer(bundle, fsl, donate=False)
+    batch = FederatedBatcher(fed, 8, h, seed=0).next_round()
+    T = _deadline_between_tiers(probe, batch, net, compute_s=0.5)
+    tr = Trainer(bundle, fsl, donate=False, network=net,
+                 scheduler=DeadlinePolicy(deadline_s=T, compute_s=0.5))
+    state, hist = tr.run(tr.init(0), FederatedBatcher(fed, 8, h, seed=0),
+                         rounds, log_every=1)
+    agg_rows = [r for r in hist if r["aggregated"]]
+    assert agg_rows and all(r["participants"] == n - 1 for r in agg_rows)
+    assert agg_rows[-1]["dropped_updates"] == len(agg_rows)
+    ps = tr.participation_summary()
+    assert ps["tier_participation"]["3g"] == 0.0
+    assert ps["tier_participation"]["wifi"] == 1.0
+    assert ps["mean_cohort"] == n - 1
+    # refresh_dropped: the cohort average is broadcast to the whole fleet
+    for leaf in jax.tree_util.tree_leaves(state["clients"]["params"]):
+        arr = np.asarray(leaf, np.float32)
+        assert np.isfinite(arr).all()
+        for c in range(1, n):
+            np.testing.assert_array_equal(arr[0], arr[c])
+
+
+def test_deadline_async_arrival_level_drop():
+    """Arrival-level admission, distinct from the analytic plan: a policy
+    whose plan admits everyone but whose wall-clock budget is tight drops
+    the realized 3g straggler at the barrier."""
+    class BudgetOnly(SchedulerPolicy):
+        name = "test_budget_only"
+
+        def __init__(self, budget):
+            self.budget = budget
+
+        def round_budget(self, ctx, rnd):
+            return self.budget
+
+    n, h, rounds = 4, 2, 2
+    bundle, fed = _setup(n=n, samples=480)
+    fsl = FSLConfig(num_clients=n, h=h, lr=0.05)
+    net = TieredNetwork()
+    probe = AsyncTrainer(bundle, fsl, latency=ConstantLatency(0.5, 0.0, 0.0),
+                         network=net, seed=1)
+    batch = FederatedBatcher(fed, 8, h, seed=0).next_round()
+    T = _deadline_between_tiers(probe, batch, net, compute_s=0.5)
+    tr = AsyncTrainer(bundle, fsl, latency=ConstantLatency(0.5, 0.0, 0.0),
+                      network=net, scheduler=BudgetOnly(T), seed=1)
+    _, hist = tr.run(tr.init(0), FederatedBatcher(fed, 8, h, seed=0),
+                     rounds, log_every=1)
+    s = tr.stats.as_dict()
+    assert s["dropped"] == rounds                  # one 3g drop per round
+    assert s["skipped"] == 0                       # plan admitted everyone
+    assert all(r["participants"] == n - 1 for r in hist if r["aggregated"])
+    assert s["min_participants"] == n - 1
+    # a dropped round's wall-clock is floored at the budget, not the
+    # straggler's arrival
+    assert s["async_time"] < rounds * (0.5 * h + net.expected_links(n)[0]
+                                       .up_seconds(10 ** 7))
+
+
+def test_empty_cohort_aggregation_warns_and_noops():
+    class Nobody(SchedulerPolicy):
+        name = "test_nobody"
+
+        def plan(self, ctx, num_rounds):
+            return np.zeros((num_rounds, ctx.fsl.num_clients), bool)
+
+    n, h, rounds = 2, 2, 2
+    bundle, fed = _setup(n=n)
+    fsl = FSLConfig(num_clients=n, h=h, lr=0.05)
+    tr = Trainer(bundle, fsl, donate=False, scheduler=Nobody(),
+                 network=TieredNetwork())
+    with pytest.warns(UserWarning, match="admitted no clients"):
+        state, hist = tr.run(tr.init(0),
+                             FederatedBatcher(fed, 8, h, seed=0), rounds,
+                             log_every=1)
+    assert all(r["participants"] == 0 for r in hist if r["aggregated"])
+    assert hist[-1]["dropped_updates"] == n * sum(
+        1 for r in hist if r["aggregated"])
+    # no-op: clients trained independently, never averaged
+    leaves = jax.tree_util.tree_leaves(state["clients"]["params"])
+    assert any(not np.array_equal(np.asarray(l)[0], np.asarray(l)[1])
+               for l in leaves)
+
+
+def test_bandwidth_h_async_local_steps_keep_training():
+    """bandwidth_h in the event engine: a plan-skipped client still runs
+    its local steps (local_when_skipped) and keeps its own state at the
+    next aggregation (refresh_dropped=False => client rows differ)."""
+    n, h, rounds = 4, 2, 3
+    bundle, fed = _setup(n=n, samples=480)
+    fsl = FSLConfig(num_clients=n, h=h, lr=0.05)
+    tr = AsyncTrainer(bundle, fsl, latency=ConstantLatency(0.2, 0.0, 0.0),
+                      network=TieredNetwork(), scheduler="bandwidth_h",
+                      seed=1)
+    state, hist = tr.run(tr.init(0), FederatedBatcher(fed, 8, h, seed=0),
+                         rounds, log_every=1)
+    s = tr.stats.as_dict()
+    assert s["skipped"] > 0                        # 3g/4g strides sat out
+    assert s["dropped"] == 0                       # no budget, no drops
+    agg = [r for r in hist if r["aggregated"]]
+    assert agg and all(0 < r["participants"] < n for r in agg)
+    leaves = jax.tree_util.tree_leaves(state["clients"]["params"])
+    # wifi (stride 1) holds the cohort average; a strided-out client kept
+    # its local state => rows differ after the last aggregation
+    assert any(not np.array_equal(np.asarray(l)[0], np.asarray(l)[-1])
+               for l in leaves)
