@@ -93,7 +93,20 @@ def bench_one(cfg, method: str, h: int, rounds: int, chunk: int,
         t_chunk = min(t_chunk, t)
     compiled_sps = rounds / t_chunk
 
+    # Recompilation guard (repro.analysis rule R001): two independent
+    # Trainer builds of the same config must lower to structurally
+    # identical chunk programs — a fingerprint mismatch means dict-order /
+    # closure nondeterminism is forcing a silent recompile per process,
+    # which would charge compile time to steady-state numbers.
+    sample = FederatedBatcher(fed, batch_size, h, seed=seed).next_round()
+    fp_a = fresh()[0].chunk_fingerprint(sample, chunk)
+    fp_b = fresh()[0].chunk_fingerprint(sample, chunk)
+    assert fp_a == fp_b, (
+        f"chunk program fingerprint unstable across Trainer builds "
+        f"({method}): {fp_a[:16]} != {fp_b[:16]} — see rule R001")
+
     return {
+        "chunk_fingerprint": fp_a[:16],
         "arch": cfg.name, "method": method, "h": h, "rounds": rounds,
         "chunk": chunk, "batch": batch_size,
         "loop_steps_per_s": round(loop_sps, 2),

@@ -32,6 +32,8 @@ SUITES = [
 
 
 def main():
+    from repro.analysis.guards import assert_x64_disabled
+    assert_x64_disabled(where="benchmarks/run.py")
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     args = ap.parse_args()

@@ -1,0 +1,46 @@
+"""Static contract checker: the repo's invariants enforced at review time.
+
+Every load-bearing guarantee here — exact compressed-byte accounting on
+the smashed-data / gradient wire (the core CSE-FSL claim), bitwise
+loop-vs-compiled parity, disjoint PRNG streams per codec channel,
+donation inside the chunked ``lax.scan`` — used to be proven only
+dynamically, by running the bitwise test sweep per method x codec x
+engine.  This package proves the *structural* half statically, by tracing
+the production programs abstractly (``jax.make_jaxpr`` / ``eval_shape``,
+no real arrays) and linting the sources:
+
+  - Layer 1 (:mod:`repro.analysis.contracts`): the jaxpr auditor — wire
+    payload specs vs what the codecs actually see, no host callbacks or
+    float64 in the donated chunk body, donation aliasing, PRNG channel
+    disjointness, recompilation-stable chunk fingerprints;
+  - Layer 2 (:mod:`repro.analysis.ast_lint`): retired-shim imports,
+    Python branches on traced values in methods/kernels, registry
+    completeness.
+
+CLI (the CI gate; see README "Static analysis")::
+
+  PYTHONPATH=src python -m repro.analysis.check --all
+
+Rule catalogue + waivers: :mod:`repro.analysis.rules`.
+"""
+from repro.analysis.ast_lint import lint_paths, lint_source
+from repro.analysis.contracts import (audit_chunk, audit_kernels,
+                                      audit_prng, audit_registry,
+                                      audit_wire_contracts, chunk_matrix,
+                                      run_layer1,
+                                      trainer_chunk_fingerprint)
+from repro.analysis.guards import assert_x64_disabled
+from repro.analysis.jaxpr_audit import (donation_report, find_callbacks,
+                                        find_wide_dtypes, fingerprint,
+                                        iter_eqns, spec_tree, specs_equal)
+from repro.analysis.rules import RULES, Violation, apply_waivers
+
+__all__ = [
+    "RULES", "Violation", "apply_waivers", "assert_x64_disabled",
+    "audit_chunk", "audit_kernels", "audit_prng", "audit_registry",
+    "audit_wire_contracts",
+    "chunk_matrix", "donation_report", "find_callbacks",
+    "find_wide_dtypes", "fingerprint", "iter_eqns", "lint_paths",
+    "lint_source", "run_layer1", "spec_tree", "specs_equal",
+    "trainer_chunk_fingerprint",
+]

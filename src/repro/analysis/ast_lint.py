@@ -1,0 +1,174 @@
+"""Layer 2: AST lint for repo-specific pitfalls.
+
+Pure-syntax rules that need no tracing at all:
+
+  A001  imports of the retired ``repro.core.protocol`` /
+        ``repro.core.baselines`` shims (the modules are deleted; this rule
+        IS the migration guard now — it also catches
+        ``importlib.import_module("repro.core.protocol")`` with a literal);
+  A002  Python ``if`` / ``while`` (or conditional expressions) whose test
+        calls into ``jnp`` / ``lax`` inside method or kernel code — a
+        branch on a traced value either crashes under jit
+        (ConcretizationTypeError) or, worse, silently bakes one branch
+        into the compiled chunk.  Use ``lax.cond`` / ``jnp.where``.
+
+Waive a single finding with an inline ``# analysis: waive=A002`` comment
+on the offending line (the waiver marker must name the rule).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Iterable, List, Optional, Sequence
+
+from repro.analysis.rules import Violation
+
+RETIRED_MODULES = ("repro.core.protocol", "repro.core.baselines")
+
+# A002 scope: files whose code runs under jit (methods + kernels).  The
+# trainers/benchmarks legitimately branch host-side on fetched values.
+TRACED_CODE_DIRS = ("core/methods", "kernels")
+
+# jnp/lax attributes that are static metadata, not traced computation —
+# branching on these is host-side and fine.
+_STATIC_ATTRS = frozenset({
+    "issubdtype", "dtype", "ndim", "shape", "size", "float32", "float16",
+    "bfloat16", "int32", "int8", "uint32", "uint8", "float8_e4m3fn",
+    "floating", "integer", "inexact", "signedinteger",
+})
+
+_WAIVE_RE = re.compile(r"#\s*analysis:\s*waive=([A-Z]\d{3})")
+
+
+def _waived_lines(source: str) -> dict:
+    """line number -> set of rule IDs waived inline on that line."""
+    out: dict = {}
+    for i, text in enumerate(source.splitlines(), start=1):
+        for m in _WAIVE_RE.finditer(text):
+            out.setdefault(i, set()).add(m.group(1))
+    return out
+
+
+def _is_retired(module: Optional[str]) -> bool:
+    return module is not None and any(
+        module == r or module.startswith(r + ".") for r in RETIRED_MODULES)
+
+
+class _TracedTestFinder(ast.NodeVisitor):
+    """Does an expression subtree compute through jnp/lax?"""
+
+    def __init__(self):
+        self.hit: Optional[str] = None
+
+    def visit_Attribute(self, node: ast.Attribute):
+        root = node.value
+        chain = [node.attr]
+        while isinstance(root, ast.Attribute):
+            chain.append(root.attr)
+            root = root.value
+        if isinstance(root, ast.Name):
+            chain.append(root.id)
+            chain.reverse()
+            base = chain[0]
+            traced_root = (base in ("jnp", "lax")
+                           or (base == "jax" and len(chain) > 1
+                               and chain[1] in ("numpy", "lax", "nn")))
+            if traced_root and node.attr not in _STATIC_ATTRS:
+                self.hit = ".".join(chain)
+        self.generic_visit(node)
+
+
+def _test_is_traced(test: ast.expr) -> Optional[str]:
+    finder = _TracedTestFinder()
+    finder.visit(test)
+    return finder.hit
+
+
+def lint_source(source: str, filename: str,
+                traced_scope: bool = False) -> List[Violation]:
+    """Lint one file's source.  ``traced_scope`` turns on A002 (method /
+    kernel files); A001 applies everywhere."""
+    out: List[Violation] = []
+    try:
+        tree = ast.parse(source, filename=filename)
+    except SyntaxError as e:
+        return [Violation("A001", f"unparseable file: {e}", file=filename,
+                          line=e.lineno)]
+    waived = _waived_lines(source)
+
+    def emit(rule: str, msg: str, line: int):
+        if rule in waived.get(line, ()):
+            return
+        out.append(Violation(rule, msg, file=filename, line=line))
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if _is_retired(alias.name):
+                    emit("A001", f"import of retired shim "
+                         f"{alias.name!r} — use repro.core.methods / "
+                         "repro.core.trainer", node.lineno)
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module
+            if _is_retired(mod):
+                emit("A001", f"import from retired shim {mod!r} — use "
+                     "repro.core.methods / repro.core.trainer",
+                     node.lineno)
+            elif mod == "repro.core":
+                for alias in node.names:
+                    if alias.name in ("protocol", "baselines"):
+                        emit("A001", f"import of retired shim "
+                             f"repro.core.{alias.name!r}", node.lineno)
+        elif isinstance(node, ast.Call):
+            # importlib.import_module("repro.core.protocol")
+            fn = node.func
+            name = fn.attr if isinstance(fn, ast.Attribute) else \
+                fn.id if isinstance(fn, ast.Name) else ""
+            if name in ("import_module", "__import__") and node.args:
+                arg = node.args[0]
+                if isinstance(arg, ast.Constant) and \
+                        _is_retired(str(arg.value)):
+                    emit("A001", f"dynamic import of retired shim "
+                         f"{arg.value!r}", node.lineno)
+        if traced_scope and isinstance(node, (ast.If, ast.While, ast.IfExp)):
+            hit = _test_is_traced(node.test)
+            if hit is not None:
+                kind = {ast.If: "if", ast.While: "while",
+                        ast.IfExp: "conditional expression"}[type(node)]
+                emit("A002", f"Python {kind} on a traced value "
+                     f"({hit}(...)) — use lax.cond / lax.select / "
+                     "jnp.where", node.test.lineno)
+    return out
+
+
+def default_roots(repo_root: Path) -> List[Path]:
+    return [p for p in (repo_root / "src" / "repro",
+                        repo_root / "benchmarks",
+                        repo_root / "examples") if p.exists()]
+
+
+def lint_paths(paths: Optional[Sequence] = None,
+               repo_root: Optional[Path] = None) -> List[Violation]:
+    """Lint explicit files, or the default repo scope (src/repro,
+    benchmarks, examples — tests are excluded: they deliberately exercise
+    violations)."""
+    if paths is None:
+        root = repo_root or _find_repo_root()
+        paths = []
+        for base in default_roots(root):
+            paths.extend(sorted(base.rglob("*.py")))
+    out: List[Violation] = []
+    for path in paths:
+        path = Path(path)
+        rel = path.as_posix()
+        traced = any(f"/{d}/" in rel or rel.endswith(f"/{d}")
+                     for d in TRACED_CODE_DIRS)
+        out.extend(lint_source(path.read_text(), str(path),
+                               traced_scope=traced))
+    return out
+
+
+def _find_repo_root() -> Path:
+    """src/repro/analysis/ast_lint.py -> repo root three levels up."""
+    return Path(__file__).resolve().parents[3]

@@ -1,0 +1,501 @@
+"""Layer 1: the jaxpr auditor over the method x codec x scheduler matrix.
+
+For every registered :class:`~repro.core.methods.base.FSLMethod`, every
+registered codec, and both scheduler shapes (plain and
+participation-masked chunks) this module traces the *actual* production
+programs — ``make_round_step``, ``make_chunk_step``, ``AsyncHooks``,
+``make_wire_aggregate`` — abstractly over a tiny split CNN and checks the
+repo's load-bearing invariants (see :data:`repro.analysis.rules.RULES`):
+
+  W001/W002  the declared ``payload_specs`` / ``model_sync_specs`` equal
+             the shapes the codecs see inside the trace, via spy codecs
+             recorded during ``jax.eval_shape`` — so every
+             ``CommProfile.*_wire`` byte count is provably what a real
+             wire would carry;
+  W003       the method's declared ``wire_channels`` match the channels
+             the trace crosses;
+  C001/C002  no host callbacks and no 64-bit values inside the donated
+             ``lax.scan`` chunk body;
+  D001       donation holds — every donated carry leaf is aliased into an
+             output in the StableHLO (no silent per-dispatch copy);
+  P001       the transport's PRNG streams are pairwise disjoint across
+             channels and upload units;
+  R001       the chunk jaxpr's structural fingerprint is identical across
+             two independent constructions (recompilation guard — also
+             wired into ``benchmarks/perf_bench.py``);
+  A003       registry completeness (hooks, agg_keys, wire_channels,
+             decomposition consistency).
+
+The harness model is deliberately tiny (an 8x8 2-channel split CNN) —
+every check is about *structure*, which is size-invariant, and a small
+trace keeps the full matrix in CI seconds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import inspect
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.jaxpr_audit import (_HEX_ADDR, donation_report,
+                                        find_callbacks, find_wide_dtypes,
+                                        spec_tree, specs_equal)
+from repro.analysis.rules import Violation
+from repro.configs.base import FSLConfig
+from repro.transport import CHANNEL_SALTS, Codec, Transport
+
+# ---------------------------------------------------------------------------
+# The abstract harness: a tiny split CNN every trace runs over
+# ---------------------------------------------------------------------------
+
+_N, _H, _B = 2, 2, 2                 # clients, upload period, batch size
+
+
+def harness_bundle():
+    """The smallest CNN bundle exercising the full contract surface
+    (client stage + aux head + server stage)."""
+    from repro.core.bundle import cnn_bundle
+    from repro.models.cnn import CNNConfig
+    cfg = CNNConfig("analysis_cnn", (8, 8, 1), 10, conv_channels=(2, 2),
+                    kernel=3, server_widths=(8,), aux_channels=2, lrn=False)
+    return cnn_bundle(cfg)
+
+
+def harness_fsl(method: str, codec: str = "none",
+                server_update: str = "sequential") -> FSLConfig:
+    return FSLConfig(num_clients=_N, h=_H, method=method, codec=codec,
+                     server_update=server_update,
+                     grad_clip=1.0 if method == "fsl_oc" else 0.0)
+
+
+def harness_batch_spec():
+    """Abstract ``(inputs, labels)`` round batch: ``[n, h, B, ...]``."""
+    return (jax.ShapeDtypeStruct((_N, _H, _B, 8, 8, 1), jnp.float32),
+            jax.ShapeDtypeStruct((_N, _H, _B), jnp.int32))
+
+
+def harness_state_spec(method, bundle, fsl):
+    return jax.eval_shape(lambda k: method.init_state(bundle, fsl, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+_LR = jax.ShapeDtypeStruct((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Spy codecs: record exactly what the transport is asked to code
+# ---------------------------------------------------------------------------
+
+
+class SpyCodec(Codec):
+    """A non-identity codec whose encode/decode are the identity map but
+    which records the (shape, dtype) of every payload it is handed during
+    tracing.  Substituting it for a real codec engages every coding path
+    (``is_identity`` is False) without changing the numerics, so the
+    recorded specs are the ground truth any real codec would see."""
+
+    is_identity = False
+    stochastic = False
+
+    def __init__(self, name: str):
+        self.name = name
+        self.seen: List[jax.ShapeDtypeStruct] = []
+
+    def encode(self, payload, *, key=None):
+        self.seen.append(jax.ShapeDtypeStruct(tuple(payload.shape),
+                                              payload.dtype))
+        return {"x": payload}
+
+    def decode(self, wire, spec):
+        return wire["x"]
+
+    def roundtrip(self, payload, *, key=None):
+        self.encode(payload)
+        return payload
+
+    def wire_bytes(self, spec) -> int:
+        return int(np.prod(tuple(spec.shape))) * \
+            np.dtype(spec.dtype).itemsize
+
+
+def spy_transport() -> Tuple[Transport, Dict[str, SpyCodec]]:
+    spies = {ch: SpyCodec(f"__spy_{ch}__")
+             for ch in ("uplink", "downlink", "model_up", "model_down")}
+    tp = Transport(uplink=spies["uplink"], downlink=spies["downlink"],
+                   model_up=spies["model_up"],
+                   model_down=spies["model_down"])
+    return tp, spies
+
+
+def _float_leaves(tree) -> List[jax.ShapeDtypeStruct]:
+    return [leaf for leaf in jax.tree_util.tree_leaves(tree)
+            if jnp.issubdtype(leaf.dtype, jnp.floating)]
+
+
+# ---------------------------------------------------------------------------
+# W rules: wire-contract audit (one per method variant)
+# ---------------------------------------------------------------------------
+
+
+def audit_wire_contracts(method_name: str,
+                         server_update: str = "sequential",
+                         bundle=None) -> List[Violation]:
+    """W001 / W002 / W003 (+ C001/C002 on the raw AsyncHooks, which the
+    async engine jits as standalone programs)."""
+    from repro.core.methods import get_method
+    method = get_method(method_name)
+    bundle = bundle or harness_bundle()
+    fsl = harness_fsl(method_name, server_update=server_update)
+    combo = f"method={method_name}" + \
+        (f" server_update={server_update}" if server_update != "sequential"
+         else "")
+    batch = harness_batch_spec()
+    state = harness_state_spec(method, bundle, fsl)
+    out: List[Violation] = []
+
+    # -- W001: the assembled round step, traced with spy codecs ------------
+    tp, spies = spy_transport()
+    round_step = method.make_round_step(bundle, fsl, transport=tp)
+    jax.eval_shape(round_step, state, batch, _LR)
+    up_spec, reply_spec = method.payload_specs(bundle, fsl, batch)
+    err = specs_equal(_float_leaves(up_spec), spies["uplink"].seen)
+    if err:
+        out.append(Violation(
+            "W001", f"uplink payload_specs do not match what the codec "
+            f"sees: {err}", combo=combo))
+    declared_down = _float_leaves(reply_spec) if reply_spec is not None \
+        else []
+    if spies["downlink"].seen or declared_down:
+        err = specs_equal(declared_down, spies["downlink"].seen)
+        if err:
+            out.append(Violation(
+                "W001", f"downlink payload_specs (reply) do not match "
+                f"what the codec sees: {err}", combo=combo))
+
+    # -- W003: declared channels vs traced channels ------------------------
+    traced = {ch for ch in ("uplink", "downlink") if spies[ch].seen}
+    declared = set(method.wire_channels)
+    if traced != declared:
+        out.append(Violation(
+            "W003", f"declared wire_channels {sorted(declared)} != traced "
+            f"channels {sorted(traced)}", combo=combo))
+
+    # -- W002: the model-sync wire inside make_wire_aggregate --------------
+    tp2, spies2 = spy_transport()
+    agg = method.make_wire_aggregate(fsl, transport=tp2)
+    jax.eval_shape(agg, state)
+    mspec = _float_leaves(method.model_sync_specs(bundle, fsl))
+    err = specs_equal(mspec, spies2["model_up"].seen)
+    if err:
+        out.append(Violation(
+            "W002", f"model_sync_specs do not match what the model-up "
+            f"codec sees: {err}", combo=combo))
+    err = specs_equal(mspec, spies2["model_down"].seen)
+    if err:
+        out.append(Violation(
+            "W002", f"model_sync_specs do not match what the model-down "
+            f"codec sees: {err}", combo=combo))
+
+    # -- C001/C002 on the standalone async hook programs -------------------
+    if server_update == "sequential":
+        hooks, _, cslice, unit, lr = method.hook_arg_specs(bundle, fsl,
+                                                           batch)
+        jaxpr = jax.make_jaxpr(hooks.client_compute)(cslice, unit, lr)
+        out.extend(_hygiene(jaxpr, combo + " program=client_compute"))
+        _, upload, _, _ = jax.eval_shape(hooks.client_compute, cslice,
+                                         unit, lr)
+        sstate = state[hooks.server_key] if hooks.server_shared \
+            else cslice[hooks.server_key]
+        jaxpr = jax.make_jaxpr(hooks.server_consume)(sstate, upload, lr)
+        out.extend(_hygiene(jaxpr, combo + " program=server_consume"))
+    return out
+
+
+def _hygiene(jaxpr, combo: str) -> List[Violation]:
+    """C001 + C002 over one traced program."""
+    out = []
+    cbs = find_callbacks(jaxpr)
+    if cbs:
+        out.append(Violation(
+            "C001", f"host callback primitive(s) {sorted(set(cbs))} inside "
+            "a compiled program", combo=combo))
+    wide = find_wide_dtypes(jaxpr)
+    if wide:
+        prims = sorted({f"{p}->{d}" for p, d in wide})[:4]
+        out.append(Violation(
+            "C002", f"64-bit values inside a compiled program: {prims} "
+            f"({len(wide)} site(s))", combo=combo))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# C/D/R rules: the donated chunk program (one per method x codec x masked)
+# ---------------------------------------------------------------------------
+
+
+def _chunk_specs(method, bundle, fsl, masked: bool, rounds: int = 2):
+    state = harness_state_spec(method, bundle, fsl)
+    batch = harness_batch_spec()
+    batches = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct((rounds,) + tuple(x.shape), x.dtype),
+        batch)
+    lrs = jax.ShapeDtypeStruct((rounds,), jnp.float32)
+    if not masked:
+        return (state, batches, lrs)
+    masks = jax.ShapeDtypeStruct((rounds, fsl.num_clients), jnp.float32)
+    part = jax.ShapeDtypeStruct((fsl.num_clients,), jnp.float32)
+    return (state, batches, lrs, masks, part)
+
+
+def _fingerprint_jaxpr(jaxpr) -> str:
+    return hashlib.sha256(_HEX_ADDR.sub("0x", str(jaxpr)).encode()) \
+        .hexdigest()
+
+
+def audit_chunk(method_name: str, codec: str = "none",
+                masked: bool = False, server_update: str = "sequential",
+                bundle=None) -> Tuple[List[Violation], str]:
+    """C001 / C002 / D001 / R001 on one compiled-chunk program.  Returns
+    the violations plus the chunk's structural fingerprint."""
+    from repro.core.methods import get_method
+    method = get_method(method_name)
+    bundle = bundle or harness_bundle()
+    fsl = harness_fsl(method_name, codec=codec, server_update=server_update)
+    combo = (f"method={method_name} codec={codec} "
+             f"sched={'masked' if masked else 'wait_all'}")
+    if server_update != "sequential":
+        combo += f" server_update={server_update}"
+    specs = _chunk_specs(method, bundle, fsl, masked)
+
+    def build():
+        return method.make_chunk_step(bundle, fsl, participation=masked)
+
+    chunk = build()
+    jaxpr = jax.make_jaxpr(chunk)(*specs)
+    out = _hygiene(jaxpr, combo)
+
+    # D001: structure of the carry + actual aliasing in the lowering
+    out_state = jax.eval_shape(chunk, *specs)[0]
+    err = specs_equal(specs[0], spec_tree(out_state))
+    if err:
+        out.append(Violation(
+            "D001", f"chunk output state is not donation-compatible with "
+            f"the input carry: {err}", combo=combo))
+    else:
+        aliased, donatable, dropped = donation_report(chunk, specs)
+        if aliased < donatable:
+            why = f"; jax: {dropped[0]}" if dropped else ""
+            out.append(Violation(
+                "D001", f"only {aliased}/{donatable} donated carry leaves "
+                f"are aliased into outputs (silent copy per dispatch)"
+                f"{why}", combo=combo))
+
+    # R001: an independent construction must trace to the same program
+    fp1 = _fingerprint_jaxpr(jaxpr)
+    fp2 = _fingerprint_jaxpr(jax.make_jaxpr(build())(*specs))
+    if fp1 != fp2:
+        out.append(Violation(
+            "R001", "chunk jaxpr fingerprint differs across two "
+            f"constructions ({fp1[:12]} != {fp2[:12]}) — every invocation "
+            "would silently retrace/recompile", combo=combo))
+    return out, fp1
+
+
+def trainer_chunk_fingerprint(trainer, batch, chunk: int) -> str:
+    """Structural fingerprint of a live Trainer's compiled chunk program
+    over a concrete sample ``batch`` — the recompilation guard
+    ``benchmarks/perf_bench.py`` records per run (two Trainer builds of
+    the same config must agree; see EXPERIMENTS.md §Throughput)."""
+    state = harness_state_spec(trainer.method, trainer.bundle, trainer.fsl)
+    bspec = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct((chunk,) + tuple(jnp.shape(x)),
+                                       jnp.result_type(x)), batch)
+    lrs = jax.ShapeDtypeStruct((chunk,), jnp.float32)
+    jaxpr = jax.make_jaxpr(trainer.chunk_fn)(state, bspec, lrs)
+    return _fingerprint_jaxpr(jaxpr)
+
+
+def audit_kernels() -> List[Violation]:
+    """C001/C002 over the Pallas kernel wrappers' declared audit surface
+    (``repro.kernels.ops.audit_specs``) — traced in interpret mode, so no
+    accelerator is needed and no kernel actually executes."""
+    from repro.kernels import ops
+    out: List[Violation] = []
+    for name, fn, specs in ops.audit_specs():
+        jaxpr = jax.make_jaxpr(fn)(*specs)
+        out.extend(_hygiene(jaxpr, f"kernel={name}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# P001: PRNG stream discipline
+# ---------------------------------------------------------------------------
+
+
+def audit_prng(transport: Optional[Transport] = None,
+               units: int = 32) -> List[Violation]:
+    """Every (channel, unit) pair must derive a distinct PRNG key: a
+    collision means two codec channels draw identical stochastic noise
+    (e.g. the uplink quantizer and the model-sync quantizer cancelling
+    structure between them).  Checks the first ``units`` upload units
+    across all four channel salts."""
+    tp = transport if transport is not None else Transport()
+    out: List[Violation] = []
+    salts = CHANNEL_SALTS
+    if len(set(salts.values())) != len(salts):
+        out.append(Violation(
+            "P001", f"CHANNEL_SALTS are not pairwise distinct: {salts}",
+            combo="transport"))
+    seen: Dict[bytes, Tuple[str, int]] = {}
+    for ch, salt in salts.items():
+        for u in range(units):
+            raw = np.asarray(tp.unit_key(u, salt=salt)).tobytes()
+            if raw in seen:
+                pch, pu = seen[raw]
+                out.append(Violation(
+                    "P001", f"PRNG key collision: channel {ch!r} unit {u} "
+                    f"== channel {pch!r} unit {pu} (fold salts not "
+                    "disjoint)", combo="transport"))
+            seen[raw] = (ch, u)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# A003: registry completeness
+# ---------------------------------------------------------------------------
+
+
+def audit_registry(methods: Optional[Dict[str, object]] = None,
+                   bundle=None) -> List[Violation]:
+    """Every registered method must be drivable by ALL THREE execution
+    engines: async hooks defined, FedAvg surface declared (``agg_keys``),
+    wire contract declared (``wire_channels``) and consistent with the
+    traits, and the hook decomposition must cover ``fsl.h``."""
+    from repro.core.methods import available_methods, get_method
+    from repro.core.methods.base import FSLMethod
+    if methods is None:
+        methods = {nm: get_method(nm) for nm in available_methods()}
+    bundle = bundle or harness_bundle()
+    out: List[Violation] = []
+    for nm, m in sorted(methods.items()):
+        cls = type(m)
+        try:
+            src = inspect.getsourcefile(cls)
+            line = inspect.getsourcelines(cls)[1]
+        except (OSError, TypeError):
+            src, line = None, None
+
+        def flag(msg):
+            out.append(Violation("A003", f"method {nm!r}: {msg}",
+                                 file=src, line=line))
+
+        if cls.make_async_hooks is FSLMethod.make_async_hooks:
+            flag("does not define make_async_hooks (sync-only methods "
+                 "cannot ride the async engine or the wire audit)")
+            continue
+        if not (isinstance(m.agg_keys, tuple) and m.agg_keys
+                and "clients" in m.agg_keys):
+            flag(f"agg_keys must be a non-empty tuple containing "
+                 f"'clients', got {m.agg_keys!r}")
+        chans = set(getattr(m, "wire_channels", ()))
+        if not chans or not chans <= {"uplink", "downlink"}:
+            flag(f"wire_channels must be a non-empty subset of "
+                 f"{{'uplink','downlink'}}, got {sorted(chans)}")
+        elif ("downlink" in chans) != bool(m.downloads_gradients):
+            flag(f"wire_channels {sorted(chans)} contradict "
+                 f"downloads_gradients={m.downloads_gradients}")
+        fsl = harness_fsl(nm if nm in ("cse_fsl", "fsl_mc", "fsl_oc",
+                                       "fsl_an") else "cse_fsl")
+        fsl = dataclasses.replace(fsl, method=nm)
+        try:
+            hooks = m.make_async_hooks(bundle, fsl)
+        except Exception as e:                        # incomplete stub
+            flag(f"make_async_hooks raised during construction: {e}")
+            continue
+        K, bpu = hooks.uploads_per_round, hooks.batches_per_upload
+        if K * bpu != fsl.h:
+            flag(f"hook decomposition {K}x{bpu} does not cover h={fsl.h}")
+        if not isinstance(hooks.unit_has_h_axis, bool):
+            flag(f"unit_has_h_axis must be a bool, got "
+                 f"{hooks.unit_has_h_axis!r}")
+        blocking = hooks.client_receive is not None
+        if blocking != bool(m.downloads_gradients):
+            flag(f"hooks blocking={blocking} contradicts "
+                 f"downloads_gradients={m.downloads_gradients}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The matrix
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Combo:
+    method: str
+    codec: str = "none"
+    masked: bool = False
+    server_update: str = "sequential"
+
+    def __str__(self):
+        s = (f"method={self.method} codec={self.codec} "
+             f"sched={'masked' if self.masked else 'wait_all'}")
+        if self.server_update != "sequential":
+            s += f" server_update={self.server_update}"
+        return s
+
+
+def chunk_matrix(full: bool = False) -> List[Combo]:
+    """The audited combinations.  Fast mode covers every method on the
+    identity wire (plain + masked) plus one coded combo; ``--all`` sweeps
+    every registered codec and the CSE fused-batched sync override."""
+    from repro.core.methods import available_methods
+    from repro.transport import available_codecs
+    methods = available_methods()
+    codecs = available_codecs() if full else ("none", "int8")
+    out: List[Combo] = []
+    for m in methods:
+        for c in codecs:
+            out.append(Combo(m, c, masked=False))
+            if full or c == "none":
+                out.append(Combo(m, c, masked=True))
+    if full:
+        out.append(Combo("cse_fsl", "none", server_update="batched"))
+        out.append(Combo("cse_fsl", "int8", server_update="batched"))
+    return out
+
+
+def run_layer1(full: bool = False, progress=None):
+    """All Layer-1 audits.  Returns ``(violations, fingerprints)`` where
+    ``fingerprints`` maps combo -> chunk jaxpr hash (the values CI can
+    diff across PRs to see which programs structurally changed)."""
+    from repro.core.methods import available_methods
+    bundle = harness_bundle()
+    violations: List[Violation] = []
+    fingerprints: Dict[str, str] = {}
+    violations.extend(audit_prng())
+    violations.extend(audit_registry(bundle=bundle))
+    if progress:
+        progress("kernel hygiene: fused_ce / ssm_scan / swa_attention")
+    violations.extend(audit_kernels())
+    for nm in available_methods():
+        if progress:
+            progress(f"wire contracts: {nm}")
+        violations.extend(audit_wire_contracts(nm, bundle=bundle))
+    if full:
+        if progress:
+            progress("wire contracts: cse_fsl (batched override)")
+        violations.extend(audit_wire_contracts(
+            "cse_fsl", server_update="batched", bundle=bundle))
+    for combo in chunk_matrix(full):
+        if progress:
+            progress(f"chunk audit: {combo}")
+        vs, fp = audit_chunk(combo.method, combo.codec, combo.masked,
+                             combo.server_update, bundle=bundle)
+        violations.extend(vs)
+        fingerprints[str(combo)] = fp
+    return violations, fingerprints

@@ -1,0 +1,29 @@
+"""Host-side runtime guards for config drift the jaxpr rules can't see.
+
+Rule C002 proves no float64 exists *inside* the compiled programs the
+checker traces; it cannot see a launcher process that globally flipped
+``jax_enable_x64`` (which would double every wire payload and silently
+change every byte count CommMeter reports).  Entry points call
+:func:`assert_x64_disabled` first thing, so the drift fails fast with a
+pointer instead of producing a subtly-wrong multi-hour run.
+"""
+from __future__ import annotations
+
+
+def assert_x64_disabled(where: str = "") -> None:
+    """Fail fast (SystemExit) if float64 is globally enabled.
+
+    The repo's numerics and accounting contract is float32 end to end
+    (paper Table II counts 4-byte words; the codecs' wire_bytes assume
+    it).  ``JAX_ENABLE_X64=1`` / ``jax.config.update("jax_enable_x64",
+    True)`` breaks that silently — every analytic byte count and every
+    bitwise oracle would be wrong without a single test failing loudly.
+    """
+    import jax
+    if jax.config.jax_enable_x64:
+        at = f" ({where})" if where else ""
+        raise SystemExit(
+            f"float64 is globally enabled{at}: the repo's wire accounting "
+            "and bitwise oracles assume float32 end to end (rule C002 "
+            "covers the compiled path; this guard covers host config "
+            "drift).  Unset JAX_ENABLE_X64 / jax_enable_x64 to proceed.")

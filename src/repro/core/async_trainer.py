@@ -604,8 +604,10 @@ class AsyncTrainer:
         blocking = self._receive_fn is not None
         active = np.ones(n, bool)       # counted in this round's barrier
 
-        def _codec_key(k: int, c: int, salt: int):
-            return self.transport.unit_key(unit0 + k, client=c, salt=salt)
+        def _codec_key(k: int, c: int, channel: str):
+            from repro.transport import CHANNEL_SALTS
+            return self.transport.unit_key(unit0 + k, client=c,
+                                           salt=CHANNEL_SALTS[channel])
         heap: list = []
         seq = itertools.count()
         next_k = [0] * n
@@ -624,7 +626,7 @@ class AsyncTrainer:
             cslice, upload, pending, m = self._compute_fn(
                 slices[c], _unit_batch(batch, c, k, hooks), lr)
             if self._code_up is not None:
-                upload = self._code_up(upload, _codec_key(k, c, 0))
+                upload = self._code_up(upload, _codec_key(k, c, "uplink"))
             slices[c] = cslice
             tally(m)
             client_t[c] += float(comp[c, k])
@@ -692,7 +694,8 @@ class AsyncTrainer:
                 t_reply = t_done + float(down[c, k]) + float(xd[c, k])
                 st.comm_time += float(xd[c, k])
                 if self._code_down is not None:
-                    reply = self._code_down(reply, _codec_key(k, c, 1))
+                    reply = self._code_down(reply,
+                                            _codec_key(k, c, "downlink"))
                 slices[c] = self._receive_fn(slices[c], pending, reply, lr)
                 st.client_wait += t_reply - client_t[c]
                 client_t[c] = t_reply

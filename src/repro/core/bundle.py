@@ -1,8 +1,8 @@
 """SplitModelBundle: the uniform interface the FSL protocols operate on.
 
-The protocol layer (``repro.core.protocol`` / ``baselines``) is generic over
-model families — transformers (all 10 assigned archs) and the paper's CNNs —
-through this small bundle of pure functions.
+The method layer (``repro.core.methods``) is generic over model families —
+transformers (all 10 assigned archs) and the paper's CNNs — through this
+small bundle of pure functions.
 """
 from __future__ import annotations
 

@@ -189,9 +189,12 @@ def assemble_round_step(hooks: AsyncHooks, fsl: FSLConfig,
     code_up = not tp.uplink.is_identity
     code_down = blocking and not tp.downlink.is_identity
 
-    def _client_keys(state, salt: int):
-        """One key per client, unique per (seed, unit counter, direction)."""
-        base = tp.unit_key(state["round"], salt=salt)
+    def _client_keys(state, channel: str):
+        """One key per client, unique per (seed, unit counter, channel) —
+        the fold salts come from ``repro.transport.CHANNEL_SALTS``, the
+        single stream-discipline contract rule P001 audits."""
+        from repro.transport import CHANNEL_SALTS
+        base = tp.unit_key(state["round"], salt=CHANNEL_SALTS[channel])
         return jax.vmap(jax.random.fold_in, (None, 0))(base, jnp.arange(n))
 
     def unit_step(state, ubatch, lr):
@@ -200,7 +203,7 @@ def assemble_round_step(hooks: AsyncHooks, fsl: FSLConfig,
             lambda cs, b: hooks.client_compute(cs, b, lr))(cstack, ubatch)
         if code_up:
             uploads = jax.vmap(tp.code_uplink)(uploads,
-                                               _client_keys(state, 0))
+                                               _client_keys(state, "uplink"))
         if shared:
             def consume(sstate, up):
                 if server_constraint is not None:
@@ -217,8 +220,8 @@ def assemble_round_step(hooks: AsyncHooks, fsl: FSLConfig,
             cstack = {**cstack, skey: sstates}
         if blocking:
             if code_down:
-                replies = jax.vmap(tp.code_downlink)(replies,
-                                                     _client_keys(state, 1))
+                replies = jax.vmap(tp.code_downlink)(
+                    replies, _client_keys(state, "downlink"))
             cstack = jax.vmap(
                 lambda cs, p, r: hooks.client_receive(cs, p, r, lr))(
                     cstack, pendings, replies)
@@ -351,6 +354,14 @@ class FSLMethod:
     # exactly this set, so masked and plain aggregation touch the same
     # state.
     agg_keys: tuple = ("clients",)
+    # Declared wire contract: the per-round transport channels this
+    # method's round step crosses.  ``repro.analysis`` rule W003 checks the
+    # declaration against the channels an abstract trace actually touches,
+    # and A003 checks it against ``downloads_gradients`` — so the
+    # declaration can never silently drift from the program.  Blocking
+    # methods that ship cut-layer gradients back declare
+    # ``("uplink", "downlink")``.
+    wire_channels: tuple = ("uplink",)
 
     # -- training ----------------------------------------------------------
     def init_state(self, bundle: SplitModelBundle, fsl: FSLConfig,
@@ -446,13 +457,15 @@ class FSLMethod:
         upload their coded model and enter the renormalized average, and
         ``refresh`` decides whether non-participants download the coded
         average or keep their local params."""
-        from repro.transport import resolve_transport
+        from repro.transport import CHANNEL_SALTS, resolve_transport
         tp = resolve_transport(transport, fsl)
         agg = self.make_masked_aggregate(refresh=refresh) if participation \
             else self.make_aggregate()
         if tp.model_identity:
             return agg
         n = fsl.num_clients
+        up_salt = CHANNEL_SALTS["model_up"]
+        down_salt = CHANNEL_SALTS["model_down"]
 
         def _with_params(state, params):
             return {**state, "clients": {**state["clients"],
@@ -461,7 +474,7 @@ class FSLMethod:
         def _coded_up(state):
             params = state["clients"]["params"]
             keys = jax.vmap(jax.random.fold_in, (None, 0))(
-                tp.unit_key(state["round"], salt=2), jnp.arange(n))
+                tp.unit_key(state["round"], salt=up_salt), jnp.arange(n))
             return jax.vmap(tp.code_model_up)(params, keys)
 
         if participation:
@@ -539,14 +552,17 @@ class FSLMethod:
         return int(state["round"]) * self.unit_batches(fsl)
 
     # -- accounting --------------------------------------------------------
-    def payload_specs(self, bundle: SplitModelBundle, fsl: FSLConfig,
-                      batch):
-        """Abstract (ShapeDtypeStruct) pytrees of ONE client's ONE upload
-        unit and the server's reply, recovered from the async hooks via
-        ``jax.eval_shape`` — the exact shapes the transport codecs see, so
-        ``Codec.wire_bytes`` accounting is exact, not approximate.
-        Returns ``(upload_spec, reply_spec)`` (``reply_spec`` is None for
-        non-blocking methods)."""
+    def hook_arg_specs(self, bundle: SplitModelBundle, fsl: FSLConfig,
+                       batch):
+        """Abstract argument specs for tracing the async hooks standalone.
+
+        Returns ``(hooks, state_spec, cslice_spec, unit_spec, lr_spec)``:
+        the hooks themselves, the full stacked state, ONE client's slice of
+        the stacked subtrees, ONE upload unit of ``batch`` (``[n,(h,)B,
+        ...]`` with the leading axes dropped per ``unit_has_h_axis``), and
+        the scalar lr.  Shared by :meth:`payload_specs` and the static
+        checker (``repro.analysis``), which traces ``client_compute`` /
+        ``server_consume`` abstractly against exactly these specs."""
         hooks = self.make_async_hooks(bundle, fsl)
         state = jax.eval_shape(lambda k: self.init_state(bundle, fsl, k),
                                jax.ShapeDtypeStruct((2,), jnp.uint32))
@@ -558,6 +574,18 @@ class FSLMethod:
             lambda x: jax.ShapeDtypeStruct(tuple(x.shape[drop:]), x.dtype),
             batch)
         lr = jax.ShapeDtypeStruct((), jnp.float32)
+        return hooks, state, cslice, unit, lr
+
+    def payload_specs(self, bundle: SplitModelBundle, fsl: FSLConfig,
+                      batch):
+        """Abstract (ShapeDtypeStruct) pytrees of ONE client's ONE upload
+        unit and the server's reply, recovered from the async hooks via
+        ``jax.eval_shape`` — the exact shapes the transport codecs see, so
+        ``Codec.wire_bytes`` accounting is exact, not approximate.
+        Returns ``(upload_spec, reply_spec)`` (``reply_spec`` is None for
+        non-blocking methods)."""
+        hooks, state, cslice, unit, lr = self.hook_arg_specs(bundle, fsl,
+                                                             batch)
         _, upload, _, _ = jax.eval_shape(hooks.client_compute, cslice, unit,
                                          lr)
         reply = None
@@ -626,6 +654,11 @@ def register(cls):
     resolvable by ``get_method(cls.name)``."""
     if not cls.name:
         raise ValueError(f"{cls.__name__} must set a non-empty .name")
+    if cls.name in _REGISTRY:
+        raise ValueError(
+            f"duplicate FSL method name {cls.name!r}: already registered "
+            f"by {type(_REGISTRY[cls.name]).__name__}; pick a distinct "
+            f".name (registered: {available_methods()})")
     _REGISTRY[cls.name] = cls()
     return cls
 

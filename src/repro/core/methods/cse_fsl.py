@@ -227,6 +227,7 @@ class CSEFSL(FSLMethod):
     downloads_gradients = False
     server_replicated = False
     has_aux = True
+    wire_channels = ("uplink",)         # non-blocking: no gradient downlink
 
     def init_state(self, bundle, fsl, key):
         return init_state(bundle, fsl, key)

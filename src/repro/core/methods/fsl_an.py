@@ -77,6 +77,7 @@ class FSLAN(FSLMethod):
     server_replicated = True
     has_aux = True
     agg_keys = ("clients", "servers")   # replicas FedAvg too (make_aggregate)
+    wire_channels = ("uplink",)         # non-blocking: no gradient downlink
 
     def init_state(self, bundle, fsl, key):
         return init_state(bundle, fsl, key)

@@ -84,6 +84,7 @@ class FSLMC(FSLMethod):
     server_replicated = True
     has_aux = False
     agg_keys = ("clients", "servers")   # replicas FedAvg too (see above)
+    wire_channels = ("uplink", "downlink")  # blocking: cut-layer grads back
 
     def init_state(self, bundle, fsl, key):
         return init_state(bundle, fsl, key)

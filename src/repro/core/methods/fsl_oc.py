@@ -82,6 +82,7 @@ class FSLOC(FSLMethod):
     downloads_gradients = True
     server_replicated = False
     has_aux = False
+    wire_channels = ("uplink", "downlink")  # blocking: cut-layer grads back
 
     def init_state(self, bundle, fsl, key):
         return init_state(bundle, fsl, key)

@@ -180,6 +180,16 @@ class Trainer:
                                         payload_specs=specs,
                                         model_specs=mspecs)
 
+    def chunk_fingerprint(self, batch, chunk: int) -> str:
+        """Structural hash of this trainer's compiled chunk program over a
+        sample round ``batch`` (``[n, h, B, ...]``), via the static
+        checker's tracer.  Two Trainers of the same config must agree —
+        a mismatch means nondeterministic construction forces a silent
+        retrace+recompile per process (rule R001; perf_bench asserts this
+        per run and ships the hash in BENCH_perf.json)."""
+        from repro.analysis import trainer_chunk_fingerprint
+        return trainer_chunk_fingerprint(self, batch, chunk)
+
     def wallclock_estimate(self, cost_model: CostModel, batch_size: int,
                            num_rounds: int, network, batch=None,
                            compute: float = 1.0, server_time: float = 0.05):

@@ -29,6 +29,28 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def audit_specs():
+    """The kernels' declared audit surface: ``(name, fn, arg_specs)`` for
+    every public Pallas op, shaped to tile each kernel's grid at least
+    once.  ``repro.analysis`` traces these abstractly (interpret mode —
+    no accelerator, no real arrays) and runs the compiled-path hygiene
+    rules (C001 no host callbacks, C002 no float64) over the jaxprs, so
+    a kernel edit that leaks a debug callback or a wide dtype fails the
+    static gate before any benchmark runs."""
+    f32, i32 = jnp.float32, jnp.int32
+    S = jax.ShapeDtypeStruct
+    return (
+        ("fused_ce", fused_ce,
+         (S((16, 8), f32), S((8, 128), f32), S((16,), i32))),
+        ("ssm_scan", ssm_scan,
+         (S((1, 16, 8), f32), S((1, 16, 8), f32), S((8, 4), f32),
+          S((1, 16, 4), f32), S((1, 16, 4), f32), S((8,), f32))),
+        ("swa_attention", lambda q, k, v: swa_attention(q, k, v, 8),
+         (S((1, 16, 2, 8), f32), S((1, 16, 2, 8), f32),
+          S((1, 16, 2, 8), f32))),
+    )
+
+
 def _ce_blocks(t: int, d: int, v: int):
     """Block sizes keeping x-tile + w-tile + scratch within ~8MB VMEM."""
     bt = 128 if t >= 128 else max(8, t)

@@ -75,6 +75,8 @@ class LMBatcher:
 
 
 def main():
+    from repro.analysis.guards import assert_x64_disabled
+    assert_x64_disabled(where="launch/train.py")
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--rounds", type=int, default=50)

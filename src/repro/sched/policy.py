@@ -302,6 +302,11 @@ def register_policy(cls):
     :func:`get_policy` (and the ``--scheduler`` flags)."""
     if not cls.name:
         raise ValueError(f"{cls.__name__} must set a non-empty .name")
+    if cls.name in _POLICIES:
+        raise ValueError(
+            f"duplicate policy name {cls.name!r}: already registered by "
+            f"{type(_POLICIES[cls.name]).__name__}; pick a distinct .name "
+            f"(registered: {available_policies()})")
     _POLICIES[cls.name] = cls()
     return cls
 

@@ -43,6 +43,17 @@ import numpy as np
 
 from repro.kernels import quantize as qk
 
+# The PRNG fold salt of each wire channel — THE single source of truth for
+# stream discipline, shared by the sync assembly
+# (``repro.core.methods.base``), the event engine
+# (``repro.core.async_trainer``), and the model-sync aggregation wrapper.
+# Salts 0/1 keep the original ``unit * 2 + salt`` fold (pre-model-sync
+# coded runs stay bitwise-reproducible); salts 2/3 fold a disjoint
+# negative stream (see :meth:`Transport.unit_key`).  The static checker
+# (``repro.analysis``, rule P001) proves the derived key streams pairwise
+# disjoint across channels and units.
+CHANNEL_SALTS = {"uplink": 0, "downlink": 1, "model_up": 2, "model_down": 3}
+
 # ---------------------------------------------------------------------------
 # Codec interface
 # ---------------------------------------------------------------------------
@@ -224,9 +235,18 @@ _CODECS: Dict[str, Codec] = {}
 
 
 def register_codec(cls):
-    """Class decorator: makes ``cls.name`` resolvable by :func:`get_codec`."""
+    """Class decorator: makes ``cls.name`` resolvable by :func:`get_codec`.
+    Duplicate names are an error, never a silent overwrite — a shadowed
+    codec would change the wire numerics (and the metered bytes) of every
+    run that resolves the name."""
     if not cls.name:
         raise ValueError(f"{cls.__name__} must set a non-empty .name")
+    if cls.name in _CODECS:
+        raise ValueError(
+            f"duplicate codec name {cls.name!r}: already registered by "
+            f"{type(_CODECS[cls.name]).__name__} — pick a unique .name "
+            "(silent overwrites would change wire numerics under the "
+            "same flag)")
     _CODECS[cls.name] = cls()
     return cls
 

@@ -133,12 +133,14 @@ def test_server_sequential_order_nearly_invariant():
     assert rel < 5e-3, rel
 
 
-def test_retired_shims_raise_import_error():
-    """PR 3 retired the protocol/baselines shims: importing them must fail
-    loudly with a pointer at the methods API."""
+def test_retired_shims_are_gone():
+    """PR 3 retired the protocol/baselines shims; PR 7 deleted them
+    outright (the ``repro.analysis`` A001 lint now guards against stale
+    imports creeping back in).  Importing must fail as a plain missing
+    module."""
     import importlib
     for mod in ("repro.core.protocol", "repro.core.baselines"):
-        with pytest.raises(ImportError, match="repro.core.methods"):
+        with pytest.raises(ModuleNotFoundError):
             importlib.import_module(mod)
 
 
