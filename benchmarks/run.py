@@ -1,20 +1,25 @@
 """Benchmark driver: one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--only NAME]
+  PYTHONPATH=src python -m benchmarks.run [--only NAME] [--smoke]
 
 Order matters for runtime: the analytic tables run in seconds, the
 convergence benchmarks train the paper's CNNs for real on CPU.
+``--smoke`` forwards ``smoke=True`` to every suite whose ``main`` takes
+it (the perf suites) — the fast CI path that still exercises the
+asserted acceptance bars and writes the ``BENCH_*.json`` artifacts.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 import traceback
 
 from benchmarks import fig6_async_order, fig9_codec_tradeoff, \
-    fig45_convergence, fig78_aux_arch, fig_sched, fig_wallclock, perf_bench, \
-    roofline_report, table2_comm_storage, table5_tradeoff, table34_aux_params
+    fig45_convergence, fig78_aux_arch, fig_population, fig_sched, \
+    fig_wallclock, perf_bench, roofline_report, table2_comm_storage, \
+    table5_tradeoff, table34_aux_params
 
 SUITES = [
     ("table2_comm_storage", table2_comm_storage.main),
@@ -27,6 +32,7 @@ SUITES = [
     ("fig_sched", fig_sched.main),
     ("table5_tradeoff", table5_tradeoff.main),
     ("perf_bench", perf_bench.main),
+    ("fig_population", fig_population.main),
     ("roofline_report", roofline_report.main),
 ]
 
@@ -36,15 +42,20 @@ def main():
     assert_x64_disabled(where="benchmarks/run.py")
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI path: forwarded to suites that take it")
     args = ap.parse_args()
 
     failures = []
     for name, fn in SUITES:
         if args.only and args.only != name:
             continue
+        kwargs = {}
+        if args.smoke and "smoke" in inspect.signature(fn).parameters:
+            kwargs["smoke"] = True
         t0 = time.time()
         try:
-            fn()
+            fn(**kwargs)
             print(f"\n[{name}] OK in {time.time() - t0:.1f}s")
         except Exception:
             traceback.print_exc()

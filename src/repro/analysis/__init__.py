@@ -25,9 +25,10 @@ Rule catalogue + waivers: :mod:`repro.analysis.rules`.
 """
 from repro.analysis.ast_lint import lint_paths, lint_source
 from repro.analysis.contracts import (audit_chunk, audit_kernels,
-                                      audit_prng, audit_registry,
-                                      audit_wire_contracts, chunk_matrix,
-                                      run_layer1,
+                                      audit_population_chunk, audit_prng,
+                                      audit_registry, audit_wire_contracts,
+                                      chunk_matrix,
+                                      population_chunk_specs, run_layer1,
                                       trainer_chunk_fingerprint)
 from repro.analysis.guards import assert_x64_disabled
 from repro.analysis.jaxpr_audit import (donation_report, find_callbacks,
@@ -37,10 +38,11 @@ from repro.analysis.rules import RULES, Violation, apply_waivers
 
 __all__ = [
     "RULES", "Violation", "apply_waivers", "assert_x64_disabled",
-    "audit_chunk", "audit_kernels", "audit_prng", "audit_registry",
-    "audit_wire_contracts",
+    "audit_chunk", "audit_kernels", "audit_population_chunk",
+    "audit_prng", "audit_registry", "audit_wire_contracts",
     "chunk_matrix", "donation_report", "find_callbacks",
     "find_wide_dtypes", "fingerprint", "iter_eqns", "lint_paths",
-    "lint_source", "run_layer1", "spec_tree", "specs_equal",
+    "lint_source", "population_chunk_specs", "run_layer1", "spec_tree",
+    "specs_equal",
     "trainer_chunk_fingerprint",
 ]

@@ -305,6 +305,107 @@ def audit_chunk(method_name: str, codec: str = "none",
     return out, fp1
 
 
+_S = 16                              # pool samples in the abstract harness
+
+
+def population_chunk_specs(method, bundle, fsl, masked: bool,
+                           rounds: int = 2):
+    """Abstract argument specs of the population engine's pool-chunk
+    program: the state carry, the ``[S, ...]`` device pool, the
+    ``[R, n, h, B]`` int32 cohort index plan, and the staged lrs."""
+    state = harness_state_spec(method, bundle, fsl)
+    pool = (jax.ShapeDtypeStruct((_S, 8, 8, 1), jnp.float32),
+            jax.ShapeDtypeStruct((_S,), jnp.int32))
+    idx = jax.ShapeDtypeStruct((rounds, _N, _H, _B), jnp.int32)
+    lrs = jax.ShapeDtypeStruct((rounds,), jnp.float32)
+    if not masked:
+        return (state, pool, idx, lrs)
+    masks = jax.ShapeDtypeStruct((rounds, fsl.num_clients), jnp.float32)
+    part = jax.ShapeDtypeStruct((fsl.num_clients,), jnp.float32)
+    return (state, pool, idx, lrs, masks, part)
+
+
+def audit_population_chunk(method_name: str, codec: str = "none",
+                           masked: bool = False,
+                           bundle=None) -> Tuple[List[Violation], str]:
+    """The population engine's compiled program (``gather=True`` chunk):
+    W001/W002 via spy codecs (the in-scan gather must feed the codecs the
+    exact declared payload shapes — cohort-scaled wire accounting rides on
+    it), C001/C002 hygiene, D001 donation of the state carry ONLY (the
+    pool is argument 1 and must survive across chunks), and the R001
+    two-build fingerprint.  Returns (violations, fingerprint)."""
+    from repro.core.methods import get_method
+    method = get_method(method_name)
+    bundle = bundle or harness_bundle()
+    combo = (f"program=population method={method_name} codec={codec} "
+             f"sched={'masked' if masked else 'wait_all'}")
+    out: List[Violation] = []
+
+    # -- W001/W002: spy transport through the whole pool-chunk program -----
+    fsl_spy = harness_fsl(method_name)
+    tp, spies = spy_transport()
+    spy_chunk = method.make_chunk_step(bundle, fsl_spy, transport=tp,
+                                       participation=masked, gather=True)
+    specs_spy = population_chunk_specs(method, bundle, fsl_spy, masked)
+    jax.eval_shape(spy_chunk, *specs_spy)
+    batch = harness_batch_spec()
+    up_spec, reply_spec = method.payload_specs(bundle, fsl_spy, batch)
+    err = specs_equal(_float_leaves(up_spec), spies["uplink"].seen)
+    if err:
+        out.append(Violation(
+            "W001", f"uplink payload_specs do not match what the codec "
+            f"sees inside the pool chunk: {err}", combo=combo))
+    declared_down = _float_leaves(reply_spec) if reply_spec is not None \
+        else []
+    if spies["downlink"].seen or declared_down:
+        err = specs_equal(declared_down, spies["downlink"].seen)
+        if err:
+            out.append(Violation(
+                "W001", f"downlink payload_specs do not match what the "
+                f"codec sees inside the pool chunk: {err}", combo=combo))
+    mspec = _float_leaves(method.model_sync_specs(bundle, fsl_spy))
+    for ch in ("model_up", "model_down"):
+        err = specs_equal(mspec, spies[ch].seen)
+        if err:
+            out.append(Violation(
+                "W002", f"model_sync_specs do not match what the {ch} "
+                f"codec sees inside the pool chunk: {err}", combo=combo))
+
+    # -- C/D/R on the production program (codec resolved from fsl) ---------
+    fsl = harness_fsl(method_name, codec=codec)
+    specs = population_chunk_specs(method, bundle, fsl, masked)
+
+    def build():
+        return method.make_chunk_step(bundle, fsl, participation=masked,
+                                      gather=True)
+
+    chunk = build()
+    jaxpr = jax.make_jaxpr(chunk)(*specs)
+    out.extend(_hygiene(jaxpr, combo))
+    out_state = jax.eval_shape(chunk, *specs)[0]
+    err = specs_equal(specs[0], spec_tree(out_state))
+    if err:
+        out.append(Violation(
+            "D001", f"pool-chunk output state is not donation-compatible "
+            f"with the input carry: {err}", combo=combo))
+    else:
+        aliased, donatable, dropped = donation_report(chunk, specs)
+        if aliased < donatable:
+            why = f"; jax: {dropped[0]}" if dropped else ""
+            out.append(Violation(
+                "D001", f"only {aliased}/{donatable} donated carry leaves "
+                f"are aliased into outputs (silent copy per dispatch)"
+                f"{why}", combo=combo))
+    fp1 = _fingerprint_jaxpr(jaxpr)
+    fp2 = _fingerprint_jaxpr(jax.make_jaxpr(build())(*specs))
+    if fp1 != fp2:
+        out.append(Violation(
+            "R001", "pool-chunk jaxpr fingerprint differs across two "
+            f"constructions ({fp1[:12]} != {fp2[:12]}) — every invocation "
+            "would silently retrace/recompile", combo=combo))
+    return out, fp1
+
+
 def trainer_chunk_fingerprint(trainer, batch, chunk: int) -> str:
     """Structural fingerprint of a live Trainer's compiled chunk program
     over a concrete sample ``batch`` — the recompilation guard
@@ -498,4 +599,16 @@ def run_layer1(full: bool = False, progress=None):
                              combo.server_update, bundle=bundle)
         violations.extend(vs)
         fingerprints[str(combo)] = fp
+    # the population engine's gather-chunk program rides the same matrix
+    # (the batched server_update override is a round-step concern already
+    # covered above; the gather wrapper composes with it unchanged)
+    for combo in chunk_matrix(full):
+        if combo.server_update != "sequential":
+            continue
+        if progress:
+            progress(f"population chunk audit: {combo}")
+        vs, fp = audit_population_chunk(combo.method, combo.codec,
+                                        combo.masked, bundle=bundle)
+        violations.extend(vs)
+        fingerprints[f"program=population {combo}"] = fp
     return violations, fingerprints

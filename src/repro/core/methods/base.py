@@ -251,7 +251,8 @@ def assemble_round_step(hooks: AsyncHooks, fsl: FSLConfig,
 
 
 def make_chunk_step(round_step, aggregate, fsl: FSLConfig,
-                    unit_batches: int, masked_aggregate=None):
+                    unit_batches: int, masked_aggregate=None,
+                    gather: bool = False):
     """Fuse a whole chunk of global rounds into one scannable program.
 
     ``Trainer.run`` dispatches one jitted ``round_step`` per round from the
@@ -293,23 +294,56 @@ def make_chunk_step(round_step, aggregate, fsl: FSLConfig,
     is non-empty — an empty cohort is a no-op round (the Trainer warns
     host-side); ``agg_mask`` still reports the cadence truth so history
     rows match the per-round loop.
+
+    ``gather=True`` builds the *device-resident data* variant: instead of
+    a stacked value chunk, the program takes ``(state, pool, idx, lrs[,
+    masks, part])`` where ``pool`` is the whole sample pool (every leaf
+    ``[S, ...]``, uploaded to the device once per run, never donated) and
+    ``idx`` a ``[R, n, h, B]`` int32 index plan — the scan body gathers
+    each round's batch from the pool (``pool_leaf[idx_r]``) before running
+    the identical round step.  Since the gather output equals the staged
+    host batch element for element, the pool chunk is bitwise-identical to
+    the staged one; what it removes is the per-chunk host batch transfer
+    (only the tiny index plan crosses per chunk).
     """
     agg_every = fsl.resolved_agg_every
+
+    def advance(st, batch, lr):
+        """One round + the in-carry C-batch threshold crossing."""
+        prev = st["round"] * unit_batches
+        st, metrics = round_step(st, batch, lr)
+        done = st["round"] * unit_batches
+        aggregated = (done // agg_every) > (prev // agg_every)
+        return st, metrics, aggregated
+
+    def fire_masked(st, acc, aggregated):
+        fire = jnp.logical_and(aggregated, jnp.sum(acc) > 0)
+        st = lax.cond(fire, masked_aggregate, lambda s, _: s, st, acc)
+        return st, jnp.where(aggregated, jnp.ones_like(acc), acc)
+
+    if masked_aggregate is not None and gather:
+        def masked_pool_chunk_step(state, pool, idx, lrs, masks, part):
+            def body(carry, xs):
+                st, acc = carry
+                ix, lr, mask = xs
+                batch = jax.tree_util.tree_map(lambda p: p[ix], pool)
+                st, metrics, aggregated = advance(st, batch, lr)
+                st, acc = fire_masked(st, acc * mask, aggregated)
+                return (st, acc), (metrics, aggregated)
+
+            (state, part), (metrics, agg_mask) = lax.scan(
+                body, (state, part), (idx, lrs, masks))
+            return state, metrics, agg_mask, part
+
+        return masked_pool_chunk_step
 
     if masked_aggregate is not None:
         def masked_chunk_step(state, batches, lrs, masks, part):
             def body(carry, xs):
                 st, acc = carry
                 batch, lr, mask = xs
-                prev = st["round"] * unit_batches
-                st, metrics = round_step(st, batch, lr)
-                done = st["round"] * unit_batches
-                aggregated = (done // agg_every) > (prev // agg_every)
-                acc = acc * mask
-                fire = jnp.logical_and(aggregated, jnp.sum(acc) > 0)
-                st = lax.cond(fire, masked_aggregate, lambda s, _: s,
-                              st, acc)
-                acc = jnp.where(aggregated, jnp.ones_like(acc), acc)
+                st, metrics, aggregated = advance(st, batch, lr)
+                st, acc = fire_masked(st, acc * mask, aggregated)
                 return (st, acc), (metrics, aggregated)
 
             (state, part), (metrics, agg_mask) = lax.scan(
@@ -318,13 +352,24 @@ def make_chunk_step(round_step, aggregate, fsl: FSLConfig,
 
         return masked_chunk_step
 
+    if gather:
+        def pool_chunk_step(state, pool, idx, lrs):
+            def body(st, xs):
+                ix, lr = xs
+                batch = jax.tree_util.tree_map(lambda p: p[ix], pool)
+                st, metrics, aggregated = advance(st, batch, lr)
+                st = lax.cond(aggregated, aggregate, lambda s: s, st)
+                return st, (metrics, aggregated)
+
+            state, (metrics, agg_mask) = lax.scan(body, state, (idx, lrs))
+            return state, metrics, agg_mask
+
+        return pool_chunk_step
+
     def chunk_step(state, batches, lrs):
         def body(st, xs):
             batch, lr = xs
-            prev = st["round"] * unit_batches
-            st, metrics = round_step(st, batch, lr)
-            done = st["round"] * unit_batches
-            aggregated = (done // agg_every) > (prev // agg_every)
+            st, metrics, aggregated = advance(st, batch, lr)
             st = lax.cond(aggregated, aggregate, lambda s: s, st)
             return st, (metrics, aggregated)
 
@@ -386,7 +431,7 @@ class FSLMethod:
     def make_chunk_step(self, bundle: SplitModelBundle, fsl: FSLConfig,
                         server_constraint: Optional[Callable] = None,
                         transport=None, participation: bool = False,
-                        refresh: bool = True):
+                        refresh: bool = True, gather: bool = False):
         """Returns ``chunk_step(state, batches, lrs) -> (state, metrics,
         agg_mask)`` fusing a whole chunk of rounds (stacked on a new
         leading axis) into one scanned program — see :func:`make_chunk_step`.
@@ -397,7 +442,14 @@ class FSLMethod:
         ``participation=True`` builds the scheduling variant instead:
         ``chunk_step(state, batches, lrs, masks, part)`` threading a
         per-round participation plan into the in-scan FedAvg ``lax.cond``
-        (masked, renormalized, empty-cohort no-op)."""
+        (masked, renormalized, empty-cohort no-op).
+
+        ``gather=True`` builds the device-resident-data variant
+        ``chunk_step(state, pool, idx, lrs[, masks, part])`` gathering
+        each round's batch from an on-device sample pool in-scan —
+        bitwise-identical math, no per-chunk host batch staging (jit it
+        with ``donate_argnums=(0,)`` ONLY: the pool must survive the
+        call)."""
         round_step = self.make_round_step(bundle, fsl,
                                           server_constraint=server_constraint,
                                           transport=transport)
@@ -409,7 +461,7 @@ class FSLMethod:
                                self.make_wire_aggregate(fsl,
                                                         transport=transport),
                                fsl, self.unit_batches(fsl),
-                               masked_aggregate=magg)
+                               masked_aggregate=magg, gather=gather)
 
     def make_aggregate(self):
         raise NotImplementedError

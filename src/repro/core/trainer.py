@@ -39,7 +39,13 @@ from repro.core.methods import CommProfile, FSLMethod, get_method
 def _stack_rounds(*xs):
     """Stack one leaf across a chunk of rounds.  Host arrays stack on the
     host first (one device transfer per leaf, not R), device arrays stack
-    on device."""
+    on device.
+
+    LEGACY FALLBACK ONLY: batchers implementing the device-pool protocol
+    (``device_pool()`` + ``next_round_indices()``, see
+    :class:`repro.data.FederatedBatcher`) never hit this — the compiled
+    path ships a tiny int32 index plan per chunk and gathers batches from
+    the on-device pool in-scan instead of staging values host-side."""
     if all(isinstance(x, np.ndarray) for x in xs):
         return jnp.asarray(np.stack(xs))
     return jnp.stack([jnp.asarray(x) for x in xs])
@@ -122,6 +128,14 @@ class Trainer:
                               server_constraint=self.server_constraint,
                               transport=self.transport),
             donate_argnums=donate)
+        # Device-resident-data twin of chunk_fn: gathers each round's batch
+        # from an on-device sample pool in-scan (state donated; the pool —
+        # argument 1 — is NOT, it must survive across chunks).
+        self.pool_chunk_fn = jax.jit(
+            m.make_chunk_step(self.bundle, self.fsl,
+                              server_constraint=self.server_constraint,
+                              transport=self.transport, gather=True),
+            donate_argnums=donate)
         # Scheduling (non-wait_all only — the default path above stays the
         # untouched legacy code): renormalized masked FedAvg plus the
         # chunk variant that threads the participation plan through the
@@ -137,6 +151,13 @@ class Trainer:
                                   server_constraint=self.server_constraint,
                                   transport=self.transport,
                                   participation=True, refresh=refresh),
+                donate_argnums=donate)
+            self.masked_pool_chunk_fn = jax.jit(
+                m.make_chunk_step(self.bundle, self.fsl,
+                                  server_constraint=self.server_constraint,
+                                  transport=self.transport,
+                                  participation=True, refresh=refresh,
+                                  gather=True),
                 donate_argnums=donate)
 
     # -- public per-round API (custom loops, e.g. arrival-order studies) ----
@@ -384,10 +405,22 @@ class Trainer:
         return state, history
 
     # -- the compiled loop --------------------------------------------------
+    @staticmethod
+    def pool_round_spec(pool, idx_shape):
+        """Abstract ``(inputs, labels)`` round batch implied by a device
+        pool and an ``[n, h, B]`` index plan — shape-compatible with a
+        staged batch everywhere only specs matter (CommProfile payload
+        specs, scheduler plans)."""
+        lead = tuple(idx_shape)
+        return jax.tree_util.tree_map(
+            lambda p: jax.ShapeDtypeStruct(lead + tuple(p.shape[1:]),
+                                           p.dtype), pool)
+
     def run_compiled(self, state, batcher, num_rounds: int, chunk: int = 16,
                      log_every: int = 0, callback=None,
                      meter: Optional[CommMeter] = None,
-                     cost_model: Optional[CostModel] = None):
+                     cost_model: Optional[CostModel] = None,
+                     device_data: bool = True):
         """Run ``num_rounds`` global rounds, ``chunk`` rounds per XLA
         dispatch — bitwise-identical to :meth:`run` (state AND history),
         as fast as the hardware allows.
@@ -415,6 +448,15 @@ class Trainer:
         - resume: like :meth:`run`, both the cadence and the lr schedule
           restart from ``state["round"]``, so a checkpoint taken at ANY
           round — chunk-aligned or not — continues the paper's schedule.
+
+        Data path: with ``device_data=True`` (the default) and a batcher
+        implementing the device-pool protocol (``device_pool()`` +
+        ``next_round_indices()``), the sample pool lives on device and
+        each chunk ships only an ``[R, n, h, B]`` int32 index plan — the
+        chunk program gathers batches in-scan and ``_stack_rounds`` never
+        runs.  Identical RNG stream, identical gathered values: the path
+        is bitwise-equal to staging.  Legacy batchers (no pool protocol)
+        or ``device_data=False`` fall back to host staging.
         """
         if chunk < 1:
             raise ValueError(f"chunk must be >= 1, got {chunk} "
@@ -431,18 +473,26 @@ class Trainer:
         # rows/meter/warnings match Trainer.run exactly
         part = np.ones(n, bool) if sched_active else None
         dropped_updates = 0
+        pooled = (device_data and hasattr(batcher, "device_pool")
+                  and hasattr(batcher, "next_round_indices"))
+        pool = batcher.device_pool() if pooled else None
         while done < num_rounds:
             r = min(chunk, num_rounds - done)
-            rounds = [batcher.next_round() for _ in range(r)]
+            if pooled:
+                idx = np.stack([batcher.next_round_indices()
+                                for _ in range(r)])          # [R, n, h, B]
+                sample = self.pool_round_spec(pool, idx.shape[1:])
+            else:
+                rounds = [batcher.next_round() for _ in range(r)]
+                sample = rounds[0]
             if meter is not None and cost_model is not None \
                     and profile is None:
                 batch_size = jax.tree_util.tree_leaves(
-                    rounds[0][1])[0].shape[2]
+                    sample[1])[0].shape[2]
                 profile = self.comm_profile(cost_model, batch_size,
-                                            batch=rounds[0])
+                                            batch=sample)
             if sched_active and masks is None:
-                masks = self._plan_schedule(rounds[0], rnd0 + num_rounds)
-            batches = jax.tree_util.tree_map(_stack_rounds, *rounds)
+                masks = self._plan_schedule(sample, rnd0 + num_rounds)
             lrs = jnp.asarray([self.lr_at(rnd0 + done + i) for i in range(r)],
                               jnp.float32)
             if sched_active:
@@ -450,9 +500,20 @@ class Trainer:
                     part_dev = jnp.ones(n, jnp.float32)
                 mk = jnp.asarray(masks[rnd0 + done:rnd0 + done + r],
                                  jnp.float32)
-                state, metrics, agg_mask, part_dev = self.masked_chunk_fn(
-                    state, batches, lrs, mk, part_dev)
+                if pooled:
+                    state, metrics, agg_mask, part_dev = \
+                        self.masked_pool_chunk_fn(state, pool,
+                                                  jnp.asarray(idx), lrs,
+                                                  mk, part_dev)
+                else:
+                    batches = jax.tree_util.tree_map(_stack_rounds, *rounds)
+                    state, metrics, agg_mask, part_dev = self.masked_chunk_fn(
+                        state, batches, lrs, mk, part_dev)
+            elif pooled:
+                state, metrics, agg_mask = self.pool_chunk_fn(
+                    state, pool, jnp.asarray(idx), lrs)
             else:
+                batches = jax.tree_util.tree_map(_stack_rounds, *rounds)
                 state, metrics, agg_mask = self.chunk_fn(state, batches, lrs)
             # ONE host fetch per chunk: the stacked metrics + agg mask
             agg_mask = np.asarray(agg_mask)

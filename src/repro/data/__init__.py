@@ -108,6 +108,16 @@ class FederatedBatcher:
 
     Each client cycles through its own (shuffled) local data — clients may
     have different dataset sizes (non-IID); shorter datasets wrap around.
+
+    Device-resident protocol (``Trainer.run_compiled``'s default hot
+    path): :meth:`device_pool` uploads the concatenated per-client
+    datasets to the device ONCE, and :meth:`next_round_indices` draws the
+    same shuffled cursor walk as :meth:`next_round` but returns ``[n, h,
+    B]`` int32 indices into that pool instead of gathered values — the
+    compiled chunk gathers in-scan, so no per-chunk host batch staging
+    remains.  The two draw paths share :meth:`_client_indices` (one RNG
+    stream, identical consumption order), so ``next_round()`` equals
+    ``pool[next_round_indices()]`` leaf for leaf, bitwise.
     """
 
     def __init__(self, data: FederatedData, batch_size: int, h: int,
@@ -118,8 +128,14 @@ class FederatedBatcher:
         self.rng = np.random.default_rng(seed)
         self._cursors = [0] * data.num_clients
         self._orders = [self.rng.permutation(len(d)) for d in data.inputs]
+        sizes = [len(d) for d in data.inputs]
+        self._offsets = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+        self._pool = None
+        self._device_pool = None
 
-    def _client_batch(self, i: int):
+    def _client_indices(self, i: int) -> np.ndarray:
+        """One batch of LOCAL sample indices for client i — the single
+        cursor/shuffle walk both draw paths consume."""
         n = len(self.data.inputs[i])
         take = self.bs
         idx = []
@@ -127,11 +143,13 @@ class FederatedBatcher:
             if self._cursors[i] >= n:
                 self._cursors[i] = 0
                 self._orders[i] = self.rng.permutation(n)
-            j = self._orders[i][self._cursors[i]]
-            idx.append(j)
+            idx.append(self._orders[i][self._cursors[i]])
             self._cursors[i] += 1
             take -= 1
-        idx = np.array(idx)
+        return np.array(idx)
+
+    def _client_batch(self, i: int):
+        idx = self._client_indices(i)
         return self.data.inputs[i][idx], self.data.labels[i][idx]
 
     def next_round(self, client_ids: Optional[List[int]] = None):
@@ -143,3 +161,31 @@ class FederatedBatcher:
             xs.append(np.stack(bx))
             ys.append(np.stack(by))
         return np.stack(xs), np.stack(ys)     # [n, h, B, ...]
+
+    # -- device-resident pool protocol --------------------------------------
+    def pool(self):
+        """Host-side sample pool: per-client datasets concatenated in
+        client order, so global index ``offsets[i] + local`` addresses
+        client i's sample ``local``."""
+        if self._pool is None:
+            self._pool = (np.concatenate(self.data.inputs),
+                          np.concatenate(self.data.labels))
+        return self._pool
+
+    def device_pool(self):
+        """The pool as device arrays — uploaded once, cached."""
+        if self._device_pool is None:
+            import jax.numpy as jnp
+            px, py = self.pool()
+            self._device_pool = (jnp.asarray(px), jnp.asarray(py))
+        return self._device_pool
+
+    def next_round_indices(self,
+                           client_ids: Optional[List[int]] = None):
+        """``[n, h, B]`` int32 global pool indices for one round — the
+        index-plan twin of :meth:`next_round` (same cursors, same RNG)."""
+        ids = client_ids if client_ids is not None else list(
+            range(self.data.num_clients))
+        out = [np.stack([self._offsets[i] + self._client_indices(i)
+                         for _ in range(self.h)]) for i in ids]
+        return np.stack(out).astype(np.int32)

@@ -11,6 +11,15 @@ Two modes:
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
       --rounds 50 --clients 4 --h 5 [--size {reduced,full}] [--method cse_fsl]
+
+Population mode (``--population N``) swaps the dense trainer for the
+cohort engine (:mod:`repro.population`): N virtual clients sharding one
+device-resident token pool, a cohort of ``--cohort`` (default
+``--clients``) sampled per aggregation window by ``--sampler``, server
+memory independent of N:
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+      --population 10000 --cohort 8 --sampler stratified --network tiered
 """
 from __future__ import annotations
 
@@ -30,7 +39,9 @@ from repro.core.bundle import transformer_bundle
 from repro.core.methods import available_methods
 from repro.core.trainer import Trainer
 from repro.network import NETWORK_MODELS, network_from_flags
-from repro.sched import available_policies, scheduler_from_flags
+from repro.population import Population, VirtualPool
+from repro.sched import COHORT_SAMPLERS, available_policies, \
+    scheduler_from_flags
 from repro.transport import available_codecs
 from repro.common import bytes_of, count_params
 from repro.data import FederatedBatcher, partition_dirichlet, partition_iid, \
@@ -62,6 +73,13 @@ class LMBatcher:
     def __init__(self, cfg, fed, batch_size: int, h: int, seed: int = 0):
         self.cfg = cfg
         self.inner = FederatedBatcher(fed, batch_size, h, seed=seed)
+        # device-resident path: ``run_compiled`` probes for the pool
+        # protocol with hasattr, so only expose it where it works —
+        # token-only archs (a vlm pool would carry per-sample image
+        # embeds; those fall back to host staging).
+        if cfg.family != "vlm":
+            self.device_pool = self._device_pool
+            self.next_round_indices = self.inner.next_round_indices
 
     def next_round(self):
         x, y = self.inner.next_round()      # [n,h,B,S]
@@ -72,6 +90,30 @@ class LMBatcher:
                 (n, h, b, self.cfg.num_image_tokens, self.cfg.d_model),
                 jnp.float32)
         return inputs, jnp.asarray(y)
+
+    def _device_pool(self):
+        px, py = self.inner.device_pool()
+        return {"tokens": px}, py
+
+
+class LMPool:
+    """Adapts a population data backend's token pool to the transformer
+    input pytree (same leaf mapping as :class:`LMBatcher`)."""
+
+    def __init__(self, cfg, inner):
+        if cfg.family == "vlm":
+            raise ValueError("population mode needs poolable (token-only) "
+                             f"inputs; {cfg.name} is a vlm")
+        self.cfg = cfg
+        self.inner = inner
+        self.stateless = inner.stateless
+
+    def device_pool(self):
+        px, py = self.inner.device_pool()
+        return {"tokens": px}, py
+
+    def round_indices(self, ids, rnd: int):
+        return self.inner.round_indices(ids, rnd)
 
 
 def main():
@@ -110,6 +152,20 @@ def main():
                     help="wall-clock budget per round for "
                          "--scheduler deadline (arrivals past it are "
                          "dropped, FedAvg renormalizes over participants)")
+    ap.add_argument("--population", type=int, default=0,
+                    help="fleet size N: run the cohort engine "
+                         "(repro.population) instead of the dense trainer "
+                         "— --clients becomes the per-window cohort size C")
+    ap.add_argument("--cohort", type=int, default=0,
+                    help="cohort size C for --population (default: "
+                         "--clients)")
+    ap.add_argument("--sampler", default="uniform",
+                    choices=sorted(COHORT_SAMPLERS),
+                    help="per-window cohort sampler (stratified draws "
+                         "proportionally over --network tiered tiers)")
+    ap.add_argument("--mesh", default="none", choices=["none", "host"],
+                    help="shard the cohort state over a host mesh "
+                         "(population mode; 'host' uses every local device)")
     add_size_args(ap)
     ap.add_argument("--non-iid", action="store_true")
     ap.add_argument("--server-update", default="sequential")
@@ -123,19 +179,35 @@ def main():
     cfg = get_config(args.arch)
     if args.size == "reduced":
         cfg = cfg.reduced()
-    fsl = FSLConfig(num_clients=args.clients, h=args.h, lr=args.lr,
+    # population mode: the compiled programs see a C-client fleet per
+    # aggregation window; N only exists host-side (sampler + lazy state)
+    cohort = (args.cohort or args.clients) if args.population \
+        else args.clients
+    fsl = FSLConfig(num_clients=cohort, h=args.h, lr=args.lr,
                     method=args.method, server_update=args.server_update,
                     codec=args.codec, model_codec=args.model_codec)
     bundle = transformer_bundle(cfg)
-    fed = build_data(cfg, fsl, args.seq, args.samples, args.non_iid)
-    batcher = LMBatcher(cfg, fed, args.batch, args.h)
+    d_local = args.samples
+    if args.population:
+        if args.scheduler != "wait_all":
+            ap.error("--population replaces barrier scheduling with cohort "
+                     "sampling; use --scheduler wait_all")
+        # N virtual clients sharding one token pool, stateless draws
+        x, y = synthetic_lm(args.samples, args.seq + 1, cfg.vocab_size)
+        d_local = max(args.batch * args.h, args.samples // 8)
+        pool_data = LMPool(cfg, VirtualPool(
+            x, y, d_local=d_local, batch_size=args.batch, h=args.h))
+        batcher = None
+    else:
+        fed = build_data(cfg, fsl, args.seq, args.samples, args.non_iid)
+        batcher = LMBatcher(cfg, fed, args.batch, args.h)
 
     # Table II meter
     params_abs = jax.eval_shape(bundle.init,
                                 jax.ShapeDtypeStruct((2,), jnp.uint32))
     cm = CostModel(
         n=fsl.num_clients, q=bundle.smashed_bytes_per_sample * args.seq,
-        d_local=args.samples, w_client=bytes_of(params_abs["client"]),
+        d_local=d_local, w_client=bytes_of(params_abs["client"]),
         w_server=bytes_of(params_abs["server"]),
         aux=bytes_of(params_abs["aux"]))
     meter = CommMeter()
@@ -145,9 +217,20 @@ def main():
     # The scheduler plans against the selected network's links (wait_all
     # keeps the legacy barrier and builds no mask machinery at all).
     network = network_from_flags(args.network, args.bandwidth_mbps)
-    scheduler = scheduler_from_flags(args.scheduler, args.deadline_s)
-    trainer = Trainer(bundle, fsl, scheduler=scheduler, network=network)
-    state = trainer.init()
+    pop = None
+    if args.population:
+        mesh = None
+        if args.mesh == "host":
+            mesh = make_host_mesh(model=1, data=jax.device_count())
+        pop = Population(bundle, fsl, population=args.population,
+                         data=pool_data, sampler=args.sampler,
+                         network=network, mesh=mesh)
+        trainer = pop.trainer
+        pop.init()
+    else:
+        scheduler = scheduler_from_flags(args.scheduler, args.deadline_s)
+        trainer = Trainer(bundle, fsl, scheduler=scheduler, network=network)
+        state = trainer.init()
     t0 = time.time()
 
     def cb(rnd, metrics, _state):
@@ -157,7 +240,11 @@ def main():
     # compiled chunk runner by default — bitwise-identical to the Python
     # loop, minus thousands of per-round dispatch round-trips (--chunk 0
     # falls back to the per-round reference loop)
-    if args.chunk:
+    if pop is not None:
+        state, history = pop.run(args.rounds, chunk=max(args.chunk, 1),
+                                 log_every=args.log_every, callback=cb,
+                                 meter=meter, cost_model=cm)
+    elif args.chunk:
         state, history = trainer.run_compiled(state, batcher, args.rounds,
                                               chunk=args.chunk,
                                               log_every=args.log_every,
@@ -171,8 +258,26 @@ def main():
     print(f"\n{args.rounds} rounds in {dt:.1f}s; "
           f"total comm = {meter.total/2**20:.1f} MiB "
           f"({json.dumps({k: round(v/2**20, 2) for k, v in meter.counts.items()})} MiB)")
+    pop_summary = pop_memory = None
+    if pop is not None:
+        pop_summary = pop.population_summary(history)
+        pop_memory = pop.memory_report()
+        print(f"population {args.population:,} via {args.sampler!r} "
+              f"cohorts of {fsl.num_clients}: "
+              f"{pop_summary['unique_clients']} unique clients over "
+              f"{pop_summary['windows']} windows"
+              + (f", per tier { {k: v['participants'] for k, v in pop_summary['per_tier'].items()} }"
+                 if pop_summary["per_tier"] else ""))
+        if "straggler_seconds" in pop_summary:
+            s = pop_summary["straggler_seconds"]
+            print(f"cohort straggler seconds: p50={s['p50']:.1f} "
+                  f"p90={s['p90']:.1f} p99={s['p99']:.1f} "
+                  f"max={s['max']:.1f}")
+        print(f"engine memory {pop_memory['engine_total']/2**20:.2f} MiB "
+              f"(independent of N) vs dense per-client extrapolation "
+              f"{pop_memory['dense_extrapolated']/2**20:.1f} MiB")
     wallclock = None
-    if args.network != "ideal":
+    if args.network != "ideal" and pop is None:
         # analytic barrier wall-clock under the selected links — the same
         # time model the AsyncTrainer measures event for event
         est = trainer.wallclock_estimate(cm, args.batch, args.rounds,
@@ -194,7 +299,9 @@ def main():
         with open(args.out, "w") as f:
             json.dump({"args": vars(args), "history": history,
                        "comm": meter.as_dict(), "wallclock": wallclock,
-                       "participation": participation}, f, indent=1)
+                       "participation": participation,
+                       "population": pop_summary,
+                       "memory": pop_memory}, f, indent=1)
 
 
 if __name__ == "__main__":

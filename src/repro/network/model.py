@@ -229,6 +229,31 @@ class TieredNetwork(NetworkModel):
     def expected_links(self, n):
         return [TIERS[self.client_tier(c, n)] for c in range(n)]
 
+    def tier_ranges(self, n: int) -> List[Tuple[str, int, int]]:
+        """Contiguous ``(name, lo, hi)`` client-id ranges per tier (hi
+        exclusive), exactly consistent with :meth:`client_tier` — the
+        quantile rule assigns tiers monotonically, so each tier is one
+        interval.  O(tiers) instead of ``expected_links``'s O(n): this is
+        what lets million-client populations resolve tiers without ever
+        materializing a per-client list."""
+        ranges: List[Tuple[str, int, int]] = []
+        lo, cum = 0, 0.0
+        for i, (name, frac) in enumerate(self.tiers):
+            cum += frac
+            if i == len(self.tiers) - 1:
+                hi = n
+            else:
+                # smallest c with (c + 0.5)/n > cum, then nudge across any
+                # float-boundary disagreement (client_tier is ground truth)
+                hi = min(n, max(lo, int(np.floor(cum * n - 0.5)) + 1))
+                while hi > lo and self.client_tier(hi - 1, n) != name:
+                    hi -= 1
+                while hi < n and self.client_tier(hi, n) == name:
+                    hi += 1
+            ranges.append((name, lo, hi))
+            lo = hi
+        return ranges
+
     def draw(self, rng, rounds, n, k):
         return _from_links(self.expected_links(n), rounds, k)
 

@@ -1,0 +1,10 @@
+"""repro.population: million-client fleets through a C-client cohort.
+
+See :mod:`repro.population.engine` for the lazy-state cohort engine and
+:mod:`repro.population.data` for the device-pool data backends
+(README "Population scale", EXPERIMENTS.md §Population).
+"""
+from repro.population.data import FederatedPool, VirtualPool
+from repro.population.engine import Population
+
+__all__ = ["FederatedPool", "Population", "VirtualPool"]

@@ -2,8 +2,19 @@
 
 See :mod:`repro.sched.policy` for the SchedulerPolicy API, the built-in
 policies (wait_all / deadline / bandwidth_h / stratified), and the
-add-your-own-policy recipe (README "Scheduling").
+add-your-own-policy recipe (README "Scheduling");
+:mod:`repro.sched.cohort` for population-scale cohort sampling (which C
+of N clients train per aggregation window).
 """
+from repro.sched.cohort import (
+    COHORT_SAMPLERS,
+    CohortSampler,
+    StratifiedCohort,
+    UniformCohort,
+    get_cohort_sampler,
+    register_cohort,
+    resolve_cohort,
+)
 from repro.sched.policy import (
     BandwidthHPolicy,
     DeadlinePolicy,
@@ -22,6 +33,13 @@ from repro.sched.policy import (
 
 __all__ = [
     "BandwidthHPolicy",
+    "COHORT_SAMPLERS",
+    "CohortSampler",
+    "StratifiedCohort",
+    "UniformCohort",
+    "get_cohort_sampler",
+    "register_cohort",
+    "resolve_cohort",
     "DeadlinePolicy",
     "SchedContext",
     "SchedulerPolicy",

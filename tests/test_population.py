@@ -1,0 +1,267 @@
+"""Population engine contracts.
+
+1. BITWISE equivalence: for C == N with a FederatedPool, the cohort
+   engine must reproduce ``Trainer.run`` exactly — final state pytree,
+   history rows, and CommMeter totals — for all four methods under the
+   identity and int8 codecs, including the non-divisible h=3/C=2
+   cadence.
+2. The Trainer's own device-resident path: ``run_compiled`` defaults to
+   the pool protocol, stays bitwise vs host staging, and never calls
+   ``_stack_rounds``.
+3. Checkpoint round-trip: cohort stack + sparse cache survive
+   save/restore and resumed runs reproduce bitwise (sampler keyed on the
+   window index, VirtualPool keyed on (seed, client, round) — no hidden
+   PRNG position).
+4. Lazy state: engine memory is independent of the population size, and
+   the refresh=False sparse cache shares one row pytree per window.
+5. Cohort samplers: determinism, sorted ids, full-fleet degeneracy, and
+   stratified allocation agreeing with ``TieredNetwork.tier_ranges``.
+"""
+import os
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import FSLConfig
+from repro.core.accounting import CommMeter, CostModel
+from repro.core.bundle import cnn_bundle
+from repro.core.trainer import Trainer
+from repro.data import FederatedBatcher, partition_iid, \
+    synthetic_classification
+from repro.models.cnn import CNNConfig
+from repro.network import TieredNetwork
+from repro.population import FederatedPool, Population, VirtualPool
+from repro.sched import StratifiedCohort, UniformCohort
+
+ALL_METHODS = ("cse_fsl", "fsl_mc", "fsl_oc", "fsl_an")
+SMOKE = CNNConfig("smoke_cnn", (8, 8, 1), 10, conv_channels=(2, 2), kernel=3,
+                  server_widths=(8,), aux_channels=2, lrn=False)
+
+
+def _setup(method, n=2, h=2, agg_every=0, codec="none"):
+    fsl = FSLConfig(num_clients=n, h=h, method=method, agg_every=agg_every,
+                    codec=codec)
+    bundle = cnn_bundle(SMOKE)
+    x, y = synthetic_classification(24 * n, (8, 8, 1), 10, seed=0,
+                                    signal=12.0)
+    return bundle, fsl, partition_iid(x, y, n, seed=0)
+
+
+def _cm(n):
+    return CostModel(n=n, q=8, d_local=24, w_client=100, w_server=100,
+                     aux=10)
+
+
+def _assert_bitwise(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _dense_run(bundle, fsl, fed, rounds):
+    tr = Trainer(bundle, fsl, donate=False)
+    state = tr.init(0)
+    meter = CommMeter()
+    state, hist = tr.run(state, FederatedBatcher(fed, 4, fsl.h, seed=0),
+                         rounds, log_every=1, meter=meter,
+                         cost_model=_cm(fsl.num_clients))
+    return state, hist, meter
+
+
+def _population_run(bundle, fsl, fed, rounds, chunk=3):
+    pop = Population(bundle, fsl, population=fsl.num_clients,
+                     data=FederatedPool(fed, 4, fsl.h, seed=0),
+                     donate=False)
+    pop.init(seed=0)
+    meter = CommMeter()
+    state, hist = pop.run(rounds, chunk=chunk, log_every=1, meter=meter,
+                          cost_model=_cm(fsl.num_clients))
+    return state, hist, meter, pop
+
+
+# ---------------------------------------------------------------------------
+# 1. bitwise vs the dense trainer (full-fleet cohort)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("codec", ["none", "int8"])
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_population_bitwise_vs_dense(method, codec):
+    bundle, fsl, fed = _setup(method, codec=codec)
+    s1, h1, m1 = _dense_run(bundle, fsl, fed, rounds=5)
+    s2, h2, m2, _ = _population_run(bundle, fsl, fed, rounds=5)
+    _assert_bitwise(s1, s2)
+    assert h1 == h2
+    assert m1.total == m2.total
+
+
+def test_population_bitwise_nondivisible_cadence():
+    # h=3, C=2: threshold crossings mid-round; windows of varying length
+    bundle, fsl, fed = _setup("cse_fsl", h=3, agg_every=2)
+    s1, h1, m1 = _dense_run(bundle, fsl, fed, rounds=5)
+    s2, h2, m2, _ = _population_run(bundle, fsl, fed, rounds=5, chunk=2)
+    _assert_bitwise(s1, s2)
+    assert h1 == h2 and m1.total == m2.total
+
+
+# ---------------------------------------------------------------------------
+# 2. the Trainer's device-resident data path
+# ---------------------------------------------------------------------------
+
+
+def test_run_compiled_pool_path_bitwise_and_no_staging(monkeypatch):
+    bundle, fsl, fed = _setup("cse_fsl")
+    outs = []
+    calls = {"staged": 0}
+    import repro.core.trainer as trainer_mod
+    orig = trainer_mod._stack_rounds
+
+    def counting(*xs):
+        calls["staged"] += 1
+        return orig(*xs)
+
+    monkeypatch.setattr(trainer_mod, "_stack_rounds", counting)
+    for device_data in (False, True):
+        tr = Trainer(bundle, fsl, donate=False)
+        state = tr.init(0)
+        before = calls["staged"]
+        state, hist = tr.run_compiled(state,
+                                      FederatedBatcher(fed, 4, fsl.h,
+                                                       seed=0),
+                                      6, chunk=4, log_every=1,
+                                      device_data=device_data)
+        if device_data:
+            assert calls["staged"] == before, \
+                "_stack_rounds ran on the device-resident path"
+        else:
+            assert calls["staged"] > before
+        outs.append((state, hist))
+    _assert_bitwise(outs[0][0], outs[1][0])
+    assert outs[0][1] == outs[1][1]
+
+
+def test_batcher_pool_indices_match_values():
+    _, fsl, fed = _setup("cse_fsl", n=3)
+    a = FederatedBatcher(fed, 4, fsl.h, seed=0)
+    b = FederatedBatcher(fed, 4, fsl.h, seed=0)
+    px, py = b.pool()
+    for _ in range(4):
+        x, y = a.next_round()
+        ix = b.next_round_indices()
+        np.testing.assert_array_equal(x, px[ix])
+        np.testing.assert_array_equal(y, py[ix])
+
+
+# ---------------------------------------------------------------------------
+# 3. checkpoint round-trip
+# ---------------------------------------------------------------------------
+
+
+def _virtual_population(refresh, population=5000, sampler="stratified"):
+    fsl = FSLConfig(num_clients=3, h=2, method="cse_fsl", agg_every=4)
+    bundle = cnn_bundle(SMOKE)
+    vp = VirtualPool.synthetic((8, 8, 1), 10, pool_size=96, d_local=24,
+                               batch_size=4, h=2, seed=0)
+    pop = Population(bundle, fsl, population=population, data=vp,
+                     sampler=sampler, network=TieredNetwork(),
+                     refresh=refresh, donate=False)
+    return pop
+
+
+@pytest.mark.parametrize("refresh", [True, False])
+def test_population_checkpoint_roundtrip(refresh, tmp_path):
+    pop1 = _virtual_population(refresh).init(seed=0)
+    pop1.run(5, chunk=3)
+    path = os.path.join(tmp_path, "pop")
+    pop1.save(path)
+    if not refresh:
+        assert pop1._cache, "refresh=False run produced no cache to test"
+    sA, hA = pop1.run(7, chunk=4)
+
+    pop2 = _virtual_population(refresh).restore(path)
+    sB, hB = pop2.run(7, chunk=4)
+    _assert_bitwise(sA, sB)
+    assert hA == hB
+    _assert_bitwise(sorted(pop1._cache), sorted(pop2._cache))
+
+
+# ---------------------------------------------------------------------------
+# 4. lazy state: memory independent of N, shared cache rows
+# ---------------------------------------------------------------------------
+
+
+def test_memory_independent_of_population():
+    reports = []
+    for population in (1000, 100_000):
+        pop = _virtual_population(True, population=population).init(seed=0)
+        pop.run(4, chunk=4)
+        reports.append(pop.memory_report())
+    a, b = reports
+    assert a["engine_total"] == b["engine_total"]
+    assert b["dense_extrapolated"] == 100 * a["dense_extrapolated"] \
+        - 99 * a["engine"]["server_state"]
+    assert b["engine_total"] < b["dense_extrapolated"] / 100
+
+
+def test_refresh_true_cache_stays_empty():
+    pop = _virtual_population(True).init(seed=0)
+    pop.run(8, chunk=3)
+    assert pop._cache == {}
+
+
+def test_refresh_false_cache_shares_rows():
+    pop = _virtual_population(False).init(seed=0)
+    state, _ = pop.run(8, chunk=3)
+    assert pop._cache
+    # one shared row pytree per finished window, not one per client
+    unique = {id(r) for r in pop._cache.values()}
+    windows = {w for w in pop._windows_seen
+               if w < pop.window_of(
+                   pop.trainer.method.batches_trained(pop.fsl, state)
+                   // pop.fsl.h)}
+    assert len(unique) <= max(len(windows), 1)
+    rep = pop.memory_report()
+    assert rep["engine"]["cache_rows"] \
+        == len(unique) * rep["engine"]["default_row"]
+
+
+# ---------------------------------------------------------------------------
+# 5. cohort samplers + tier ranges
+# ---------------------------------------------------------------------------
+
+
+def test_uniform_cohort_deterministic_sorted():
+    s = UniformCohort(seed=7)
+    a = s.sample(3, 10_000, 32)
+    assert np.array_equal(a, s.sample(3, 10_000, 32))
+    assert np.all(np.diff(a) > 0)
+    assert not np.array_equal(a, s.sample(4, 10_000, 32))
+    # full-fleet degeneracy: the bitwise-equivalence draw
+    assert np.array_equal(s.sample(0, 8, 8), np.arange(8))
+    assert np.array_equal(s.sample(0, 8, 12), np.arange(8))
+
+
+def test_tier_ranges_agree_with_client_tier():
+    net = TieredNetwork()
+    for n in (7, 50, 1000):
+        spans = net.tier_ranges(n)
+        assert spans[0][1] == 0 and spans[-1][2] == n
+        flat = [name for name, lo, hi in spans for _ in range(hi - lo)]
+        assert flat == [net.client_tier(c, n) for c in range(n)]
+
+
+def test_stratified_cohort_covers_tiers():
+    net = TieredNetwork()
+    s = StratifiedCohort(seed=1)
+    ids = s.sample(0, 1_000_000, 16, network=net)
+    assert len(ids) == 16 and np.all(np.diff(ids) > 0)
+    spans = net.tier_ranges(1_000_000)
+    counts = [int(np.sum((ids >= lo) & (ids < hi))) for _, lo, hi in spans]
+    # proportional to the 25/50/25 mix, every tier represented
+    assert counts == [4, 8, 4]
+    tiny = s.sample(1, 1_000_000, 3, network=net)
+    assert [int(np.sum((tiny >= lo) & (tiny < hi)))
+            for _, lo, hi in spans] == [1, 1, 1]
