@@ -17,9 +17,9 @@ import time
 import traceback
 
 from benchmarks import fig6_async_order, fig9_codec_tradeoff, \
-    fig45_convergence, fig78_aux_arch, fig_population, fig_sched, \
-    fig_wallclock, perf_bench, roofline_report, table2_comm_storage, \
-    table5_tradeoff, table34_aux_params
+    fig45_convergence, fig78_aux_arch, fig_faults, fig_population, \
+    fig_sched, fig_wallclock, perf_bench, roofline_report, \
+    table2_comm_storage, table5_tradeoff, table34_aux_params
 
 SUITES = [
     ("table2_comm_storage", table2_comm_storage.main),
@@ -30,6 +30,7 @@ SUITES = [
     ("fig9_codec_tradeoff", fig9_codec_tradeoff.main),
     ("fig_wallclock", fig_wallclock.main),
     ("fig_sched", fig_sched.main),
+    ("fig_faults", fig_faults.main),
     ("table5_tradeoff", table5_tradeoff.main),
     ("perf_bench", perf_bench.main),
     ("fig_population", fig_population.main),

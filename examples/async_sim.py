@@ -22,6 +22,7 @@ from repro.configs.base import FSLConfig
 from repro.core.async_trainer import AsyncTrainer, make_latency
 from repro.core.bundle import cnn_bundle
 from repro.core.methods import available_methods
+from repro.faults import FAULT_MODELS, fault_from_flags
 from repro.network import NETWORK_MODELS, network_from_flags
 from repro.sched import available_policies, scheduler_from_flags
 from repro.transport import available_codecs
@@ -52,8 +53,11 @@ def run(args, latency_seed: int):
         # a real network owns all transfer time; latency narrows to compute
         latency = latency.compute_only()
     scheduler = scheduler_from_flags(args.scheduler, args.deadline_s)
+    faults = fault_from_flags(args.faults, args.loss_rate, args.crash_rate,
+                              args.max_retries)
     trainer = AsyncTrainer(bundle, fsl, latency=latency, network=network,
-                           scheduler=scheduler, seed=latency_seed)
+                           scheduler=scheduler, faults=faults,
+                           seed=latency_seed)
     state = trainer.init(args.seed)
     batcher = FederatedBatcher(fed, 20, args.h, seed=1)
     state, history = trainer.run(state, batcher, args.rounds,
@@ -96,6 +100,15 @@ def main():
                     help="per-round wall-clock budget for --scheduler "
                          "deadline; late arrivals are dropped and FedAvg "
                          "renormalizes over the participants")
+    ap.add_argument("--faults", default="none",
+                    choices=sorted(FAULT_MODELS),
+                    help="deterministic fault model: lossy uploads are "
+                         "checksum-verified and retransmitted with backoff "
+                         "in the event queue, crashed clients sit the round "
+                         "out, outages stall the server")
+    ap.add_argument("--loss-rate", type=float, default=None)
+    ap.add_argument("--crash-rate", type=float, default=None)
+    ap.add_argument("--max-retries", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -119,11 +132,18 @@ def main():
     if args.network != "ideal":
         print(f"network ({args.network}): transfer {s['comm_time']:.1f}s, "
               f"model sync {s['model_sync_time']:.1f}s of the async total")
-    if participation is not None:
+    if participation is not None and "mean_cohort" in participation:
         print(f"scheduler {args.scheduler!r}: mean cohort "
               f"{participation['mean_cohort']}/{args.clients}, "
               f"dropped {s['dropped']} late / skipped {s['skipped']} "
               f"planned-out uploads")
+    fa = (participation or {}).get("faults")
+    if fa is not None:
+        print(f"faults {args.faults!r}: {fa['retries']} retransmissions "
+              f"({fa['retry_seconds']:.1f}s backoff), "
+              f"{fa['crash_drops']} crashes, {fa['wire_drops']} wire drops, "
+              f"{fa['outages']} outages survived; "
+              f"{fa['empty_windows']}/{fa['windows']} windows empty")
     assert np.isfinite(acc1) and np.isfinite(acc2)
     if args.rounds >= 10:        # short smoke runs are too noisy to compare
         assert abs(acc1 - acc2) < 0.08, (acc1, acc2)

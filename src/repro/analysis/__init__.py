@@ -24,7 +24,8 @@ CLI (the CI gate; see README "Static analysis")::
 Rule catalogue + waivers: :mod:`repro.analysis.rules`.
 """
 from repro.analysis.ast_lint import lint_paths, lint_source
-from repro.analysis.contracts import (audit_chunk, audit_kernels,
+from repro.analysis.contracts import (audit_chunk, audit_faults,
+                                      audit_framed_wire, audit_kernels,
                                       audit_population_chunk, audit_prng,
                                       audit_registry, audit_wire_contracts,
                                       chunk_matrix,
@@ -38,7 +39,8 @@ from repro.analysis.rules import RULES, Violation, apply_waivers
 
 __all__ = [
     "RULES", "Violation", "apply_waivers", "assert_x64_disabled",
-    "audit_chunk", "audit_kernels", "audit_population_chunk",
+    "audit_chunk", "audit_faults", "audit_framed_wire", "audit_kernels",
+    "audit_population_chunk",
     "audit_prng", "audit_registry", "audit_wire_contracts",
     "chunk_matrix", "donation_report", "find_callbacks",
     "find_wide_dtypes", "fingerprint", "iter_eqns", "lint_paths",

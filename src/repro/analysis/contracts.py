@@ -466,6 +466,103 @@ def audit_prng(transport: Optional[Transport] = None,
 
 
 # ---------------------------------------------------------------------------
+# F001: fault-injection stream discipline + framed wire transparency
+# ---------------------------------------------------------------------------
+
+
+def audit_faults(transport: Optional[Transport] = None,
+                 units: int = 32) -> List[Violation]:
+    """F001: the retransmission/corruption keys :func:`repro.faults.
+    retry_key` derives must be (a) disjoint from every coded-channel key
+    the transport derives over the same units (``CHANNEL_SALTS`` x
+    ``units`` — the exact grid P001 proves internally disjoint) and (b)
+    collision-free among themselves.  A collision would mean simulating a
+    corrupted transmission draws the same PRNG stream a stochastic codec
+    uses for rounding — fault injection silently perturbing training
+    numerics, the one thing the fault layer promises never to do."""
+    from repro.faults import retry_key
+    tp = transport if transport is not None else Transport()
+    out: List[Violation] = []
+    chan: Dict[bytes, Tuple[str, int]] = {}
+    for ch, salt in CHANNEL_SALTS.items():
+        for u in range(units):
+            chan[np.asarray(tp.unit_key(u, salt=salt)).tobytes()] = (ch, u)
+    seen: Dict[bytes, int] = {}
+    for u in range(units):
+        raw = np.asarray(retry_key(tp, u)).tobytes()
+        if raw in chan:
+            pch, pu = chan[raw]
+            out.append(Violation(
+                "F001", f"retry stream collides with a codec stream: "
+                f"retry unit {u} == channel {pch!r} unit {pu} (RETRY_FOLD "
+                "inside the unit*2+salt window)", combo="faults"))
+        if raw in seen:
+            out.append(Violation(
+                "F001", f"retry keys collide between units {seen[raw]} "
+                f"and {u}", combo="faults"))
+        seen[raw] = u
+    return out
+
+
+def audit_framed_wire(method_name: str, bundle=None) -> List[Violation]:
+    """W001/W002 with every transport channel wrapped in the checksum
+    frame (:class:`repro.faults.FramedCodec`): framing must be
+    wire-transparent — the inner codec still sees exactly the declared
+    payload/model-sync specs, and the framed wire size is the inner size
+    plus ``FRAME_BYTES`` for every declared leaf (so fault-run byte
+    accounting composes with any registered codec)."""
+    from repro.core.methods import get_method
+    from repro.faults import FRAME_BYTES, FramedCodec
+    method = get_method(method_name)
+    bundle = bundle or harness_bundle()
+    fsl = harness_fsl(method_name)
+    combo = f"method={method_name} framed=True"
+    batch = harness_batch_spec()
+    state = harness_state_spec(method, bundle, fsl)
+    out: List[Violation] = []
+
+    spies = {ch: SpyCodec(f"__spy_{ch}__")
+             for ch in ("uplink", "downlink", "model_up", "model_down")}
+    tp = Transport(uplink=FramedCodec(spies["uplink"]),
+                   downlink=FramedCodec(spies["downlink"]),
+                   model_up=FramedCodec(spies["model_up"]),
+                   model_down=FramedCodec(spies["model_down"]))
+    round_step = method.make_round_step(bundle, fsl, transport=tp)
+    jax.eval_shape(round_step, state, batch, _LR)
+    up_spec, reply_spec = method.payload_specs(bundle, fsl, batch)
+    err = specs_equal(_float_leaves(up_spec), spies["uplink"].seen)
+    if err:
+        out.append(Violation(
+            "W001", f"framed uplink codec no longer sees the declared "
+            f"payload_specs: {err}", combo=combo))
+    declared_down = _float_leaves(reply_spec) if reply_spec is not None \
+        else []
+    if spies["downlink"].seen or declared_down:
+        err = specs_equal(declared_down, spies["downlink"].seen)
+        if err:
+            out.append(Violation(
+                "W001", f"framed downlink codec no longer sees the "
+                f"declared payload_specs: {err}", combo=combo))
+    agg = method.make_wire_aggregate(fsl, transport=tp)
+    jax.eval_shape(agg, state)
+    mspec = _float_leaves(method.model_sync_specs(bundle, fsl))
+    for ch in ("model_up", "model_down"):
+        err = specs_equal(mspec, spies[ch].seen)
+        if err:
+            out.append(Violation(
+                "W002", f"framed {ch} codec no longer sees the declared "
+                f"model_sync_specs: {err}", combo=combo))
+    for spec in _float_leaves(up_spec) + declared_down + mspec:
+        framed = FramedCodec(spies["uplink"]).wire_bytes(spec)
+        inner = spies["uplink"].wire_bytes(spec)
+        if framed != inner + FRAME_BYTES:
+            out.append(Violation(
+                "W001", f"framed wire_bytes({spec}) = {framed} != inner "
+                f"{inner} + FRAME_BYTES {FRAME_BYTES}", combo=combo))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # A003: registry completeness
 # ---------------------------------------------------------------------------
 
@@ -579,6 +676,7 @@ def run_layer1(full: bool = False, progress=None):
     violations: List[Violation] = []
     fingerprints: Dict[str, str] = {}
     violations.extend(audit_prng())
+    violations.extend(audit_faults())
     violations.extend(audit_registry(bundle=bundle))
     if progress:
         progress("kernel hygiene: fused_ce / ssm_scan / swa_attention")
@@ -587,6 +685,7 @@ def run_layer1(full: bool = False, progress=None):
         if progress:
             progress(f"wire contracts: {nm}")
         violations.extend(audit_wire_contracts(nm, bundle=bundle))
+        violations.extend(audit_framed_wire(nm, bundle=bundle))
     if full:
         if progress:
             progress("wire contracts: cse_fsl (batched override)")

@@ -37,6 +37,11 @@ RULES = {
             "into an output buffer (no silent copy)",
     "P001": "PRNG streams must be pairwise disjoint across the transport's "
             "uplink / downlink / model-sync channels and upload units",
+    "F001": "the fault-injection retransmission/corruption PRNG stream "
+            "(repro.faults.retry_key) must be disjoint from every "
+            "CHANNEL_SALTS coded-channel stream and internally collision-"
+            "free — a collision would couple simulated wire damage to a "
+            "stochastic codec's rounding draws",
     "R001": "the chunk jaxpr's structural fingerprint must be identical "
             "across independent constructions (recompilation guard)",
     # -- Layer 2: AST / registry lint --------------------------------------

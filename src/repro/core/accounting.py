@@ -90,7 +90,10 @@ class CommMeter:
             "model_sync": 0}
 
     def log(self, kind: str, nbytes: int):
-        self.counts[kind] += int(nbytes)
+        # unknown kinds materialize on first log (e.g. "fault_frames" on
+        # fault-injected runs) so zero-fault meters keep their exact
+        # legacy key set in as_dict()
+        self.counts[kind] = self.counts.get(kind, 0) + int(nbytes)
 
     @property
     def total(self) -> int:

@@ -294,8 +294,16 @@ class AsyncTrainer:
     # repro.sched.SchedulerPolicy makes the policy decide which arrivals
     # each aggregation admits (plan-level skips + per-round deadline).
     scheduler: Optional[Any] = None
+    # fault injection: None/"none" keeps the lossless/immortal legacy
+    # event schedule (bitwise); a preset name or repro.faults.FaultModel
+    # pre-draws a FaultTrace — lost payloads retransmit with backoff (the
+    # retry seconds land in event durations and the retry bytes in
+    # CommMeter), crashed clients sit the round out, server outages delay
+    # the round's service start.
+    faults: Optional[Any] = None
 
     def __post_init__(self):
+        from repro.faults import resolve_fault
         from repro.sched import resolve_policy
         from repro.transport import resolve_transport
         m = self.method if self.method is not None else self.fsl.method
@@ -316,7 +324,8 @@ class AsyncTrainer:
         self._agg_fn = jax.jit(
             m.make_wire_aggregate(self.fsl, transport=self.transport))
         self.scheduler = resolve_policy(self.scheduler)
-        if not self.scheduler.is_wait_all:
+        self.faults = resolve_fault(self.faults)
+        if not self.scheduler.is_wait_all or not self.faults.is_null:
             self._magg_fn = jax.jit(m.make_wire_aggregate(
                 self.fsl, transport=self.transport, participation=True,
                 refresh=self.scheduler.refresh_dropped))
@@ -324,13 +333,21 @@ class AsyncTrainer:
             else ("clients", self.hooks.server_key)
         self._sched_ctx = self._sched_plan = None
         self.stats = AsyncStats()
+        self.fault_stats = None
 
     def participation_summary(self):
         """The scheduler policy's summary of the realized plan (None until
-        a scheduled run has drawn one, and for wait_all)."""
-        if self._sched_plan is None:
-            return None
-        return self.scheduler.summary(self._sched_ctx, self._sched_plan)
+        a scheduled run has drawn one, and for wait_all), plus a
+        ``"faults"`` entry with the run's :class:`repro.faults.FaultStats`
+        whenever a non-null fault model was active."""
+        base = None
+        if self._sched_plan is not None:
+            base = self.scheduler.summary(self._sched_ctx, self._sched_plan)
+        if self.faults.is_null or self.fault_stats is None:
+            return base
+        out = dict(base or {})
+        out["faults"] = self.fault_stats.as_dict()
+        return out
 
     # -- facade parity with Trainer -----------------------------------------
     def init(self, seed: int = 0):
@@ -360,6 +377,24 @@ class AsyncTrainer:
                                         transport=self.transport,
                                         payload_specs=specs,
                                         model_specs=mspecs)
+
+    def _verify_frame(self, upload, unit: int, c: int):
+        """Exercise the checksum frame for real on a faulty event: damage
+        the coded payload deterministically (the ``retry_key`` stream,
+        disjoint from the codec keys — rule F001) and assert the receiver
+        detects it.  The corruption is applied to a COPY; the delivered
+        payload stays the retransmitted clean one, so fault injection
+        never perturbs training numerics."""
+        from repro.faults import (check_frame, corrupt_frame, make_frame,
+                                  retry_key)
+        fr = make_frame(upload)
+        bad, fr2 = corrupt_frame(upload, fr,
+                                 retry_key(self.transport, unit, c))
+        if bad is not upload and check_frame(bad, fr2):
+            raise RuntimeError(
+                "checksum frame failed to detect a simulated payload "
+                f"corruption (unit {unit}, client {c}) — the "
+                "retransmission machinery would train on garbage")
 
     # -- state <-> per-client slices ----------------------------------------
     def _split(self, state):
@@ -431,16 +466,29 @@ class AsyncTrainer:
             if net_trace.shape != (num_rounds, n, K):
                 raise ValueError(f"network trace shape {net_trace.shape} "
                                  f"!= {(num_rounds, n, K)}")
+        from repro.faults import FRAME_BYTES, FaultStats, accumulate_round
         zeros = np.zeros((n, K))
         up_bytes = down_bytes = ms_up = ms_down = None
         sched = self.scheduler
         sched_active = not sched.is_wait_all
+        fault_active = not self.faults.is_null
+        use_masks = sched_active or fault_active
+        blocking = self._receive_fn is not None
+        # fault trace: ABSOLUTE-round-indexed (unlike the relative latency
+        # trace) so a checkpoint-resumed run replays the uninterrupted
+        # run's faults — the engine indexes it at rnd0 + r
+        ftrace = self.faults.trace(rnd0 + num_rounds, n, K) \
+            if fault_active else None
+        self.fault_stats = FaultStats() if fault_active else None
+        fstats = self.fault_stats
+        unit_bytes = None
         plan = None
         ctx = None
         # participation carry: a client enters an aggregation only if it
-        # was admitted (not skipped, not dropped) in EVERY round since the
-        # previous one — the intersection a multi-round C window implies
-        part = np.ones(n, bool) if sched_active else None
+        # was admitted (not skipped, not dropped, not crashed, delivered)
+        # in EVERY round since the previous one — the intersection a
+        # multi-round C window implies
+        part = np.ones(n, bool) if use_masks else None
         self.stats = AsyncStats()
         slices, shared = self._split(state)
         history = []
@@ -451,7 +499,7 @@ class AsyncTrainer:
                 batch_size = jax.tree_util.tree_leaves(batch[1])[0].shape[2]
                 profile = self.comm_profile(cost_model, batch_size,
                                             batch=batch)
-            if (not ideal or sched_active) and up_bytes is None:
+            if (not ideal or use_masks) and up_bytes is None:
                 # per-event payload sizes are static per run: the coded
                 # wire bytes of one upload unit / reply / model sync
                 # (the scheduler's plan and partial model-sync metering
@@ -487,13 +535,38 @@ class AsyncTrainer:
             if sched_active:
                 skip = ~plan[rnd0 + r]
                 budget = sched.round_budget(ctx, rnd0 + r)
+            frnd = None
+            server_start = 0.0
+            if fault_active:
+                frnd = (ftrace.up_attempts[rnd0 + r], ftrace.up_ok[rnd0 + r],
+                        ftrace.down_attempts[rnd0 + r],
+                        ftrace.down_ok[rnd0 + r], ftrace.crash[rnd0 + r])
+                if bool(ftrace.outage[rnd0 + r]):
+                    # server down at round start: every upload waits out
+                    # the recovery (the barrier counterfactual too)
+                    server_start = float(self.faults.outage_s)
+                    self.stats.sync_time += server_start
             shared, metrics = self._run_round(
                 slices, shared, batch, lr, trace.compute[r], trace.up[r],
                 trace.down[r], xu, xd, unit0=round_val, skip=skip,
-                budget=budget, part=part)
+                budget=budget, part=part, fault=frnd,
+                server_start=server_start)
             self.stats.rounds += 1
             round_val += K
-            if profile is not None:
+            if fault_active:
+                # trace-exact billing: every transmission attempt of every
+                # non-skipped client pays payload + checksum frame
+                if profile is not None and unit_bytes is None:
+                    unit_bytes = profile.unit_wire_bytes(n, K)
+                wire = accumulate_round(
+                    fstats, self.faults, ftrace, rnd0 + r,
+                    *(unit_bytes if unit_bytes is not None else (0, 0, 0)),
+                    blocking, FRAME_BYTES,
+                    mask=plan[rnd0 + r] if sched_active else None)
+                if profile is not None:
+                    for field, total in wire.items():
+                        meter.log(field, total)
+            elif profile is not None:
                 if sched_active:
                     # only the clients that actually uploaded hit the wire
                     # (dropped arrivals were sent — and count — but the
@@ -509,17 +582,24 @@ class AsyncTrainer:
                     meter.log("uplink_labels", profile.uplink_labels)
                     meter.log("downlink_grads", profile.wire_downlink_grads)
             aggregated = cadence.advance(fsl.h)
-            row_part = int(part.sum()) if sched_active else n
+            row_part = int(part.sum()) if use_masks else n
             if aggregated:
                 state = self._join(state, slices, shared, round_val)
-                if sched_active:
+                if use_masks:
                     k = int(part.sum())
                     self.stats.agg_participants.append(k)
+                    if fault_active:
+                        fstats.windows += 1
+                        fstats.participants.append(k)
+                        if k == 0:
+                            fstats.empty_windows += 1
                     if k == 0:
+                        who = (f"scheduler {sched.name!r}" if sched_active
+                               else f"fault model {self.faults.name!r}")
                         warnings.warn(
-                            f"scheduler {sched.name!r} admitted no clients "
-                            f"at the round-{rnd0 + r + 1} aggregation; "
-                            "FedAvg skipped (no-op)")
+                            f"{who} admitted no clients at the "
+                            f"round-{rnd0 + r + 1} aggregation; FedAvg "
+                            "skipped (no-op)")
                     else:
                         state = self._magg_fn(
                             state, jnp.asarray(part, jnp.float32))
@@ -530,7 +610,7 @@ class AsyncTrainer:
                     # each client ships its coded model up and pulls the
                     # coded average down, concurrently across the fleet —
                     # the barrier is the slowest link of the round's tail
-                    if sched_active:
+                    if use_masks:
                         recv = np.ones(n, bool) if sched.refresh_dropped \
                             else part
                         per = (np.where(part,
@@ -550,14 +630,14 @@ class AsyncTrainer:
                     self.stats.sync_time += secs
                     self.stats.model_sync_time += secs
                 if profile is not None:
-                    if sched_active:
+                    if use_masks:
                         recv_n = n if sched.refresh_dropped else k
                         meter.log("model_sync",
                                   0 if k == 0
                                   else k * ms_up + recv_n * ms_down)
                     else:
                         meter.log("model_sync", profile.wire_model_sync)
-                if sched_active:
+                if use_masks:
                     part[:] = True
             if log_every and (r + 1) % log_every == 0:
                 m = {k: float(v) for k, v in metrics.items()}
@@ -568,18 +648,27 @@ class AsyncTrainer:
                     row["participants"] = row_part
                     row["dropped_updates"] = self.stats.dropped
                     row["skipped_updates"] = self.stats.skipped
+                if fault_active:
+                    row["participants"] = row_part
+                    row["fault_retries"] = fstats.retries
+                    row["fault_drops"] = (fstats.crash_drops
+                                          + fstats.wire_drops)
                 if meter is not None:
                     row["comm_bytes"] = meter.total
                 history.append(row)
                 if callback:
                     callback(rnd0 + r + 1, m,
                              self._join(state, slices, shared, round_val))
+        if fault_active:
+            # scheduler-induced drops, for contrast with crash/wire drops
+            fstats.deadline_drops = self.stats.dropped
         return self._join(state, slices, shared, round_val), history
 
     def _run_round(self, slices: List[Dict[str, Any]], shared, batch,
                    lr: float, comp: np.ndarray, up: np.ndarray,
                    down: np.ndarray, xu: np.ndarray, xd: np.ndarray,
-                   unit0: int = 0, skip=None, budget=None, part=None):
+                   unit0: int = 0, skip=None, budget=None, part=None,
+                   fault=None, server_start: float = 0.0):
         """One global round of the event simulation: client transactions
         feed a priority queue of upload arrivals; the server services them
         in arrival order (FIFO on ties, so zero latency reproduces the
@@ -598,11 +687,30 @@ class AsyncTrainer:
         ``local_when_skipped`` and the method is non-blocking); ``budget``
         a wall-clock deadline past which popped arrivals are dropped
         unconsumed; ``part`` the caller's running participation mask,
-        AND-ed with this round's outcome in place."""
+        AND-ed with this round's outcome in place.
+
+        Fault operands (None under a null fault model — then the code
+        reduces line for line to the fault-free engine): ``fault`` is the
+        round's trace slice ``(up_attempts, up_ok, down_attempts,
+        down_ok, crash)``.  Each lost transmission is retransmitted after
+        an exponential-backoff wait, so a unit's transfer time is
+        ``attempts * (latency + network) + backoff`` — retry seconds land
+        in arrival times, ``comm_time``, and reply times.  A unit whose
+        retry budget is exhausted never arrives (``part[c] = False``);
+        crashed clients (either phase) do no work and nobody waits on
+        them; ``server_start > 0`` models a server outage — no upload is
+        serviced before the recovery instant.  When the model asks for
+        ``verify_frames``, each faulty unit's checksum frame is exercised
+        for real: the coded payload is deterministically corrupted (see
+        :func:`repro.faults.corrupt_frame`) and the frame MUST detect it.
+        """
         hooks, st = self.hooks, self.stats
         n, K = len(slices), hooks.uploads_per_round
         blocking = self._receive_fn is not None
         active = np.ones(n, bool)       # counted in this round's barrier
+        if fault is not None:
+            f_att, f_ok, fd_att, fd_ok, crash = fault
+            fmodel = self.faults
 
         def _codec_key(k: int, c: int, channel: str):
             from repro.transport import CHANNEL_SALTS
@@ -621,7 +729,9 @@ class AsyncTrainer:
                 metric_cnt[key] = metric_cnt.get(key, 0) + 1
 
         def launch(c: int):
-            """Client c computes its next upload unit and ships it coded."""
+            """Client c computes its next upload unit and ships it coded,
+            retransmitting per the fault trace until delivered or the
+            retry budget runs out."""
             k = next_k[c]
             cslice, upload, pending, m = self._compute_fn(
                 slices[c], _unit_batch(batch, c, k, hooks), lr)
@@ -630,11 +740,24 @@ class AsyncTrainer:
             slices[c] = cslice
             tally(m)
             client_t[c] += float(comp[c, k])
-            st.comm_time += float(xu[c, k])
-            heapq.heappush(heap, (client_t[c] + float(up[c, k])
-                                  + float(xu[c, k]),
-                                  next(seq), c, k, upload, pending))
             next_k[c] = k + 1
+            att, ok, backoff = 1, True, 0.0
+            if fault is not None:
+                att, ok = int(f_att[c, k]), bool(f_ok[c, k])
+                backoff = fmodel.backoff_seconds(att)
+                if att > 1 and fmodel.verify_frames:
+                    self._verify_frame(upload, unit0 + k, c)
+            st.comm_time += att * float(xu[c, k])
+            xfer = att * (float(up[c, k]) + float(xu[c, k])) + backoff
+            if not ok:
+                # retry budget exhausted: the bytes burned on the wire,
+                # the payload never arrived — this client's round is lost
+                client_t[c] += xfer
+                if part is not None:
+                    part[c] = False
+                return
+            heapq.heappush(heap, (client_t[c] + xfer,
+                                  next(seq), c, k, upload, pending))
 
         for c in range(n):
             if skip is not None and skip[c]:
@@ -653,14 +776,24 @@ class AsyncTrainer:
                 else:
                     active[c] = False   # idle: contributes no round time
                 continue
+            if fault is not None and crash[c]:
+                # the client process died this round: its local update is
+                # lost, nobody waits on it, and masked FedAvg renormalizes
+                # over the survivors (crash-during-upload is billed one
+                # partial attempt of unit 0 by the caller — the bytes hit
+                # the wire; no simulated work happens either way)
+                active[c] = False
+                if part is not None:
+                    part[c] = False
+                continue
             if blocking:
                 launch(c)           # next unit only after the reply lands
             else:
                 for _ in range(K):
                     launch(c)       # local-only phase: stream all uploads
 
-        server_free = 0.0
-        replica_free = [0.0] * n
+        server_free = server_start
+        replica_free = [server_start] * n
         t_end = 0.0
         dropped_any = False
         while heap:
@@ -691,8 +824,23 @@ class AsyncTrainer:
                 replica_free[c] = t_done
             t_end = max(t_end, t_done)
             if blocking:
-                t_reply = t_done + float(down[c, k]) + float(xd[c, k])
-                st.comm_time += float(xd[c, k])
+                d_att, d_ok, d_backoff = 1, True, 0.0
+                if fault is not None:
+                    d_att, d_ok = int(fd_att[c, k]), bool(fd_ok[c, k])
+                    d_backoff = fmodel.backoff_seconds(d_att)
+                st.comm_time += d_att * float(xd[c, k])
+                t_reply = t_done + d_att * (float(down[c, k])
+                                            + float(xd[c, k])) + d_backoff
+                if not d_ok:
+                    # the gradient reply never survived its retry budget:
+                    # the client cannot continue its blocked chain — the
+                    # round is lost and it waits out the failed replies
+                    if part is not None:
+                        part[c] = False
+                    st.client_wait += t_reply - client_t[c]
+                    client_t[c] = t_reply
+                    t_end = max(t_end, t_reply)
+                    continue
                 if self._code_down is not None:
                     reply = self._code_down(reply,
                                             _codec_key(k, c, "downlink"))

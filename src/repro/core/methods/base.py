@@ -80,6 +80,17 @@ class CommProfile:
         w = self.model_sync_wire
         return w if w >= 0 else self.model_sync
 
+    def unit_wire_bytes(self, n: int, k: int):
+        """Per-upload-unit ``(smashed, labels, grads)`` wire bytes — the
+        per-round totals split over the ``n * k`` identical upload units
+        of a round (k = uploads per client per round).  The granularity
+        fault billing charges at: each transmission *attempt* of a unit
+        pays these bytes again, so retransmitted traffic is metered
+        exactly, per attempt, never averaged."""
+        per = n * k
+        return (self.wire_uplink_smashed // per, self.uplink_labels // per,
+                self.wire_downlink_grads // per)
+
     @property
     def per_round_total(self) -> int:
         return self.uplink_smashed + self.uplink_labels + self.downlink_grads

@@ -94,8 +94,15 @@ class Trainer:
     # (default: the ideal network, i.e. scheduling on compute alone).
     scheduler: Optional[Any] = None
     network: Optional[Any] = None
+    # fault injection: None/"none" keeps the lossless/immortal legacy path
+    # (bitwise — no fault machinery is even built); a preset name or
+    # repro.faults.FaultModel instance pre-draws a deterministic FaultTrace
+    # that masks crashed/undelivered clients out of FedAvg and bills every
+    # retransmission exactly.
+    faults: Optional[Any] = None
 
     def __post_init__(self):
+        from repro.faults import resolve_fault
         from repro.sched import resolve_policy
         from repro.transport import resolve_transport
         m = self.method if self.method is not None else self.fsl.method
@@ -104,10 +111,12 @@ class Trainer:
         self.method = m
         self.transport = resolve_transport(self.transport, self.fsl)
         self.scheduler = resolve_policy(self.scheduler)
+        self.faults = resolve_fault(self.faults)
         if self.network is None:
             from repro.network import IdealNetwork
             self.network = IdealNetwork()
         self._sched_ctx = self._sched_masks = None
+        self._fault_stats = None
         donate = (0,) if self.donate else ()
         self.step_fn = jax.jit(
             m.make_round_step(self.bundle, self.fsl,
@@ -136,11 +145,12 @@ class Trainer:
                               server_constraint=self.server_constraint,
                               transport=self.transport, gather=True),
             donate_argnums=donate)
-        # Scheduling (non-wait_all only — the default path above stays the
-        # untouched legacy code): renormalized masked FedAvg plus the
-        # chunk variant that threads the participation plan through the
-        # in-scan lax.cond.
-        if not self.scheduler.is_wait_all:
+        # Scheduling/faults (non-wait_all or non-null faults only — the
+        # default path above stays the untouched legacy code): renormalized
+        # masked FedAvg plus the chunk variant that threads the
+        # participation plan through the in-scan lax.cond.  Fault-dropped
+        # clients ride the exact same machinery as scheduler-dropped ones.
+        if not self.scheduler.is_wait_all or not self.faults.is_null:
             refresh = self.scheduler.refresh_dropped
             self.masked_agg_fn = jax.jit(
                 m.make_wire_aggregate(self.fsl, transport=self.transport,
@@ -213,7 +223,8 @@ class Trainer:
 
     def wallclock_estimate(self, cost_model: CostModel, batch_size: int,
                            num_rounds: int, network, batch=None,
-                           compute: float = 1.0, server_time: float = 0.05):
+                           compute: float = 1.0, server_time: float = 0.05,
+                           faults=None):
         """Analytic synchronous wall-clock for ``num_rounds`` rounds under
         ``network`` (a :class:`repro.network.NetworkModel`) — the same
         barrier time model the AsyncTrainer reports as its synchronous
@@ -223,7 +234,15 @@ class Trainer:
         one they derive from the analytic CommProfile.  ``compute`` is the
         per-upload-unit client compute seconds (the compute-only
         LatencyModel mean).  Returns a
-        :class:`repro.network.WallClockEstimate`."""
+        :class:`repro.network.WallClockEstimate`.
+
+        With a non-null fault model (``faults=`` here, defaulting to the
+        trainer's own) the estimate is failure-aware: transfer bytes are
+        scaled by the expected transmission count under the capped retry
+        budget (checksum frame included per attempt) and the expected
+        backoff wait joins the per-unit compute time — the analytic twin
+        of the event engine's realized retry seconds."""
+        from repro.faults import FRAME_BYTES, resolve_fault
         from repro.network.wallclock import estimate_sync_wallclock
         fsl, m, tp = self.fsl, self.method, self.transport
         n = fsl.num_clients
@@ -244,6 +263,13 @@ class Trainer:
             up_bytes = (profile.wire_uplink_smashed
                         + profile.uplink_labels) // (n * K)
             down_bytes = profile.wire_downlink_grads // (n * K)
+        fm = resolve_fault(faults if faults is not None else self.faults)
+        if not fm.is_null:
+            att = fm.expected_attempts()
+            up_bytes = int(round((up_bytes + FRAME_BYTES) * att))
+            if down_bytes:
+                down_bytes = int(round((down_bytes + FRAME_BYTES) * att))
+            compute = compute + fm.expected_backoff()
         mspecs = m.model_sync_specs(self.bundle, fsl)
         ms_up = tp.model_up_wire_bytes(mspecs)
         ms_down = tp.model_down_wire_bytes(mspecs)
@@ -283,12 +309,51 @@ class Trainer:
         self._sched_ctx, self._sched_masks = ctx, masks
         return masks
 
+    # -- fault plan ---------------------------------------------------------
+    def _uploads_per_round(self) -> int:
+        return self.fsl.h if self.method.uploads_every_batch else 1
+
+    def _plan_faults(self, horizon: int):
+        """Draw the fault trace for global rounds ``0..horizon-1``
+        (absolute-round-indexed like the scheduler plan, so a
+        checkpoint-resumed run replays the faults of the uninterrupted
+        one) and reset the run's :class:`FaultStats`."""
+        from repro.faults import FaultStats
+        trace = self.faults.trace(horizon, self.fsl.num_clients,
+                                  self._uploads_per_round())
+        self._fault_stats = FaultStats()
+        return trace
+
+    def _effective_masks(self, batch, horizon: int,
+                         fault_trace) -> np.ndarray:
+        """Per-round participation = scheduler plan AND fault survival:
+        a client aggregates only if the policy admitted it and its wire
+        round completed (no crash, every unit delivered) in EVERY round
+        of the window.  Both engines consume this one [horizon, n] plan,
+        which is what keeps ``run`` ≡ ``run_compiled`` bitwise under
+        faults."""
+        sched_active = not self.scheduler.is_wait_all
+        if sched_active:
+            masks = np.array(self._plan_schedule(batch, horizon), copy=True)
+        else:
+            masks = np.ones((horizon, self.fsl.num_clients), bool)
+        if fault_trace is not None:
+            masks &= fault_trace.survives(self.method.downloads_gradients)
+        return masks
+
     def participation_summary(self):
         """The scheduler policy's summary of the realized plan (None until
-        a scheduled run has drawn one, and for wait_all)."""
-        if self._sched_masks is None:
-            return None
-        return self.scheduler.summary(self._sched_ctx, self._sched_masks)
+        a scheduled run has drawn one, and for wait_all), plus a
+        ``"faults"`` entry with the run's :class:`FaultStats` whenever a
+        non-null fault model was active."""
+        base = None
+        if self._sched_masks is not None:
+            base = self.scheduler.summary(self._sched_ctx, self._sched_masks)
+        if self.faults.is_null or self._fault_stats is None:
+            return base
+        out = dict(base or {})
+        out["faults"] = self._fault_stats.as_dict()
+        return out
 
     def _model_sync_wire_pair(self):
         """(up, down) wire bytes of ONE client's model-sync payload — the
@@ -302,17 +367,24 @@ class Trainer:
     # rides on this being one code path) -----------------------------------
     def _log_round(self, rnd, rnd0, aggregated, metrics_fn, profile, meter,
                    log_every, callback, history, state, extra=None,
-                   model_sync_bytes=None):
+                   model_sync_bytes=None, wire_bytes=None):
         """Meter + history row for one finished (post-aggregation) round.
         ``metrics_fn`` lazily yields the float-cast metrics dict so the
         per-round loop only fetches device scalars on logged rounds.
         Scheduling passes participation ``extra`` row fields and the
         cohort's actual ``model_sync_bytes`` (None: the full-fleet profile
-        value — the wait_all path, byte for byte the legacy meter)."""
+        value — the wait_all path, byte for byte the legacy meter).
+        Fault runs pass ``wire_bytes`` — the trace-exact per-kind byte
+        dict (retransmissions and checksum frames included) that replaces
+        the static per-round profile charges."""
         if profile is not None:
-            meter.log("uplink_smashed", profile.wire_uplink_smashed)
-            meter.log("uplink_labels", profile.uplink_labels)
-            meter.log("downlink_grads", profile.wire_downlink_grads)
+            if wire_bytes is None:
+                meter.log("uplink_smashed", profile.wire_uplink_smashed)
+                meter.log("uplink_labels", profile.uplink_labels)
+                meter.log("downlink_grads", profile.wire_downlink_grads)
+            else:
+                for kind, nb in wire_bytes.items():
+                    meter.log(kind, nb)
             if aggregated:
                 meter.log("model_sync", profile.wire_model_sync
                           if model_sync_bytes is None else model_sync_bytes)
@@ -351,6 +423,7 @@ class Trainer:
           aggregated rounds gain ``participants`` / ``dropped_updates``
           fields and the model-sync meter charges only the actual cohort.
         """
+        from repro.faults import FRAME_BYTES, accumulate_round
         start_batches = self.method.batches_trained(self.fsl, state)
         cadence = AggregationCadence(self.fsl.resolved_agg_every,
                                      start_batches)
@@ -359,38 +432,70 @@ class Trainer:
         history = []
         profile = None
         sched_active = not self.scheduler.is_wait_all
+        fault_active = not self.faults.is_null
+        use_masks = sched_active or fault_active
+        horizon = rnd0 + num_rounds
+        ftrace = self._plan_faults(horizon) if fault_active else None
+        fstats = self._fault_stats
+        unit_bytes = None
+        blocking = self.method.downloads_gradients
         masks = ms_pair = None
-        part = np.ones(n, bool) if sched_active else None
+        part = np.ones(n, bool) if use_masks else None
+        # scheduler-only mirror: attributes window drops to the policy vs
+        # the faults in FaultStats.deadline_drops
+        part_s = np.ones(n, bool) if (sched_active and fault_active) else None
         dropped_updates = 0
-        for rnd in range(rnd0, rnd0 + num_rounds):
+        for rnd in range(rnd0, horizon):
             batch = batcher.next_round()
             if meter is not None and cost_model is not None and profile is None:
                 batch_size = jax.tree_util.tree_leaves(batch[1])[0].shape[2]
                 profile = self.comm_profile(cost_model, batch_size,
                                             batch=batch)
-            if sched_active and masks is None:
-                masks = self._plan_schedule(batch, rnd0 + num_rounds)
+            if use_masks and masks is None:
+                masks = self._effective_masks(batch, horizon, ftrace)
             state, metrics = self.step_fn(state, batch, self.lr_at(rnd))
             aggregated = cadence.advance(self.fsl.h)
-            extra = ms_bytes = None
-            if sched_active:
+            extra = ms_bytes = wire = None
+            if use_masks:
                 part &= masks[rnd]
+                if part_s is not None:
+                    part_s &= self._sched_masks[rnd]
+            if fault_active and profile is not None:
+                if unit_bytes is None:
+                    unit_bytes = profile.unit_wire_bytes(
+                        n, self._uploads_per_round())
+                wire = accumulate_round(fstats, self.faults, ftrace, rnd,
+                                        *unit_bytes, blocking, FRAME_BYTES)
             if aggregated:
-                if not sched_active:
+                if not use_masks:
                     state = self.agg_fn(state)
                 else:
                     k = int(part.sum())
                     if k == 0:
+                        who = (f"scheduler {self.scheduler.name!r}"
+                               if sched_active else
+                               f"fault model {self.faults.name!r}")
                         warnings.warn(
-                            f"scheduler {self.scheduler.name!r} admitted no "
-                            f"clients at the round-{rnd + 1} aggregation; "
-                            "FedAvg skipped (no-op)")
+                            f"{who} admitted no clients at the "
+                            f"round-{rnd + 1} aggregation; FedAvg skipped "
+                            "(no-op)")
                     else:
                         state = self.masked_agg_fn(
                             state, jnp.asarray(part, jnp.float32))
                     dropped_updates += n - k
                     extra = {"participants": k,
                              "dropped_updates": dropped_updates}
+                    if fault_active:
+                        fstats.windows += 1
+                        fstats.participants.append(k)
+                        if k == 0:
+                            fstats.empty_windows += 1
+                        if part_s is not None:
+                            fstats.deadline_drops += n - int(part_s.sum())
+                            part_s[:] = True
+                        extra.update(
+                            fault_retries=fstats.retries,
+                            fault_drops=fstats.crash_drops + fstats.wire_drops)
                     if profile is not None:
                         if ms_pair is None:
                             ms_pair = self._model_sync_wire_pair()
@@ -401,7 +506,8 @@ class Trainer:
             self._log_round(rnd, rnd0, aggregated,
                             lambda: {k: float(v) for k, v in metrics.items()},
                             profile, meter, log_every, callback, history,
-                            state, extra=extra, model_sync_bytes=ms_bytes)
+                            state, extra=extra, model_sync_bytes=ms_bytes,
+                            wire_bytes=wire)
         return state, history
 
     # -- the compiled loop --------------------------------------------------
@@ -458,6 +564,7 @@ class Trainer:
         is bitwise-equal to staging.  Legacy batchers (no pool protocol)
         or ``device_data=False`` fall back to host staging.
         """
+        from repro.faults import FRAME_BYTES, accumulate_round
         if chunk < 1:
             raise ValueError(f"chunk must be >= 1, got {chunk} "
                              "(use Trainer.run for the per-round loop)")
@@ -468,10 +575,18 @@ class Trainer:
         profile = None
         done = 0
         sched_active = not self.scheduler.is_wait_all
+        fault_active = not self.faults.is_null
+        use_masks = sched_active or fault_active
+        horizon = rnd0 + num_rounds
+        ftrace = self._plan_faults(horizon) if fault_active else None
+        fstats = self._fault_stats
+        unit_bytes = None
+        blocking = self.method.downloads_gradients
         masks = ms_pair = part_dev = None
         # host mirror of the in-scan participation carry — same math, so
         # rows/meter/warnings match Trainer.run exactly
-        part = np.ones(n, bool) if sched_active else None
+        part = np.ones(n, bool) if use_masks else None
+        part_s = np.ones(n, bool) if (sched_active and fault_active) else None
         dropped_updates = 0
         pooled = (device_data and hasattr(batcher, "device_pool")
                   and hasattr(batcher, "next_round_indices"))
@@ -491,11 +606,11 @@ class Trainer:
                     sample[1])[0].shape[2]
                 profile = self.comm_profile(cost_model, batch_size,
                                             batch=sample)
-            if sched_active and masks is None:
-                masks = self._plan_schedule(sample, rnd0 + num_rounds)
+            if use_masks and masks is None:
+                masks = self._effective_masks(sample, horizon, ftrace)
             lrs = jnp.asarray([self.lr_at(rnd0 + done + i) for i in range(r)],
                               jnp.float32)
-            if sched_active:
+            if use_masks:
                 if part_dev is None:
                     part_dev = jnp.ones(n, jnp.float32)
                 mk = jnp.asarray(masks[rnd0 + done:rnd0 + done + r],
@@ -521,30 +636,53 @@ class Trainer:
             for i in range(r):
                 rnd = rnd0 + done + i
                 aggregated = bool(agg_mask[i])
-                extra = ms_bytes = None
-                if sched_active:
+                extra = ms_bytes = wire = None
+                if use_masks:
                     part &= masks[rnd]
-                    if aggregated:
-                        k = int(part.sum())
+                    if part_s is not None:
+                        part_s &= self._sched_masks[rnd]
+                if fault_active and profile is not None:
+                    if unit_bytes is None:
+                        unit_bytes = profile.unit_wire_bytes(
+                            n, self._uploads_per_round())
+                    wire = accumulate_round(fstats, self.faults, ftrace,
+                                            rnd, *unit_bytes, blocking,
+                                            FRAME_BYTES)
+                if use_masks and aggregated:
+                    k = int(part.sum())
+                    if k == 0:
+                        who = (f"scheduler {self.scheduler.name!r}"
+                               if sched_active else
+                               f"fault model {self.faults.name!r}")
+                        warnings.warn(
+                            f"{who} admitted no clients at the "
+                            f"round-{rnd + 1} aggregation; FedAvg skipped "
+                            "(no-op)")
+                    dropped_updates += n - k
+                    extra = {"participants": k,
+                             "dropped_updates": dropped_updates}
+                    if fault_active:
+                        fstats.windows += 1
+                        fstats.participants.append(k)
                         if k == 0:
-                            warnings.warn(
-                                f"scheduler {self.scheduler.name!r} admitted "
-                                f"no clients at the round-{rnd + 1} "
-                                "aggregation; FedAvg skipped (no-op)")
-                        dropped_updates += n - k
-                        extra = {"participants": k,
-                                 "dropped_updates": dropped_updates}
-                        if profile is not None:
-                            if ms_pair is None:
-                                ms_pair = self._model_sync_wire_pair()
-                            recv = n if self.scheduler.refresh_dropped else k
-                            ms_bytes = 0 if k == 0 \
-                                else k * ms_pair[0] + recv * ms_pair[1]
-                        part[:] = True
+                            fstats.empty_windows += 1
+                        if part_s is not None:
+                            fstats.deadline_drops += n - int(part_s.sum())
+                            part_s[:] = True
+                        extra.update(
+                            fault_retries=fstats.retries,
+                            fault_drops=fstats.crash_drops + fstats.wire_drops)
+                    if profile is not None:
+                        if ms_pair is None:
+                            ms_pair = self._model_sync_wire_pair()
+                        recv = n if self.scheduler.refresh_dropped else k
+                        ms_bytes = 0 if k == 0 \
+                            else k * ms_pair[0] + recv * ms_pair[1]
+                    part[:] = True
                 self._log_round(
                     rnd, rnd0, aggregated,
                     lambda: {k: float(v[i]) for k, v in metrics.items()},
                     profile, meter, log_every, callback, history, state,
-                    extra=extra, model_sync_bytes=ms_bytes)
+                    extra=extra, model_sync_bytes=ms_bytes, wire_bytes=wire)
             done += r
         return state, history

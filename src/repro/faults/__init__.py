@@ -1,0 +1,39 @@
+"""repro.faults — deterministic fault injection and recovery.
+
+See :mod:`repro.faults.model` for the trace/model/registry design and
+:mod:`repro.faults.frame` for the checksum frame and retransmission
+machinery.  The one-screen summary:
+
+  - ``--faults {none,lossy,crashy,outage}`` (or ``Trainer(faults=...)``)
+    selects a :class:`FaultModel`; ``none`` is the default and is
+    *exactly* the identity — zero extra ops, bitwise-frozen in tests.
+  - Fault realizations are pre-drawn :class:`FaultTrace`\\ s keyed by the
+    absolute global round (same discipline as scheduler plans and
+    ``NetworkTrace``), so the same seed reproduces identical retries,
+    drops, bytes, and final params across independent runs AND across a
+    checkpoint kill/restore/continue.
+  - Retransmitted bytes (payload + ``FRAME_BYTES`` checksum trailer per
+    attempt) are billed exactly in ``CommMeter``; backoff seconds flow
+    into the event engine's durations and the analytic wall-clock.
+  - Crashed / wire-dropped clients degrade through the *existing*
+    ``fedavg_masked`` participation machinery in all four engines.
+"""
+from repro.faults.frame import (FRAME_BYTES, FramedCodec, check_frame,
+                                corrupt_frame, corrupt_payload,
+                                frame_checksum, make_frame)
+from repro.faults.model import (FAULT_MODELS, FAULT_STREAM, NO_FAULTS,
+                                RETRY_FOLD, CrashyClients, FaultModel,
+                                FaultStats, FaultTrace, LossyWire, NoFaults,
+                                OutageServer, accumulate_round,
+                                fault_from_flags, make_fault, register_fault,
+                                resolve_fault, retry_key, round_wire_bytes)
+
+__all__ = [
+    "FRAME_BYTES", "FramedCodec", "check_frame", "corrupt_frame",
+    "corrupt_payload", "frame_checksum", "make_frame",
+    "FAULT_MODELS", "FAULT_STREAM", "NO_FAULTS", "RETRY_FOLD",
+    "CrashyClients", "FaultModel", "FaultStats", "FaultTrace", "LossyWire",
+    "NoFaults", "OutageServer", "accumulate_round", "fault_from_flags",
+    "make_fault", "register_fault", "resolve_fault", "retry_key",
+    "round_wire_bytes",
+]

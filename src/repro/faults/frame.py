@@ -1,0 +1,141 @@
+"""Checksum framing for transport payloads: detect corruption, retransmit.
+
+Every wire payload in this repo is a pytree of coded arrays produced by a
+:class:`repro.transport.Codec`.  The frame adds an 8-byte trailer — a
+payload checksum over the raw bits of every leaf — that lets the receiver
+*detect* a corrupted or truncated payload and request retransmission
+instead of silently training on garbage.  The simulated corruption
+itself is deterministic: :func:`corrupt_frame` flips bits chosen by a
+``retry_key`` PRNG stream (rule F001 proves that stream disjoint from the
+``CHANNEL_SALTS`` coded-key streams, so injecting faults can never
+perturb the stochastic-rounding draws of a quantizing codec).
+
+:class:`FramedCodec` wraps any registered codec with the frame so the
+analysis sweep (W001/W002) and CommMeter both see framed wire sizes; the
+trainers bill ``FRAME_BYTES`` per transmission *attempt* — a retransmitted
+payload pays the frame again, exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.transport import Codec
+
+# Trailer size billed per transmission attempt: two uint32 words
+# (bit-sum and bit-xor of the payload words).
+FRAME_BYTES = 8
+
+
+def _payload_words(tree) -> list:
+    """Every leaf of the coded payload, bit-cast to uint32 words."""
+    words = []
+    for leaf in jax.tree_util.tree_leaves(tree):
+        arr = np.asarray(leaf)
+        if arr.dtype == np.bool_:
+            arr = arr.astype(np.uint8)
+        raw = np.frombuffer(arr.tobytes(), dtype=np.uint8)
+        pad = (-raw.size) % 4
+        if pad:
+            raw = np.concatenate([raw, np.zeros(pad, np.uint8)])
+        words.append(raw.view(np.uint32))
+    return words
+
+
+def frame_checksum(tree) -> Tuple[int, int]:
+    """(bit-sum mod 2**32, bit-xor) over every word of every leaf —
+    order-dependent on the pytree flattening, which is deterministic."""
+    total = np.uint64(0)
+    xor = np.uint32(0)
+    for words in _payload_words(tree):
+        total = np.uint64((int(total) + int(words.sum(dtype=np.uint64)))
+                          & 0xFFFFFFFF)
+        xor = np.uint32(xor ^ np.bitwise_xor.reduce(words, initial=np.uint32(0)))
+    return int(total), int(xor)
+
+
+def make_frame(tree) -> Tuple[int, int]:
+    """The trailer the sender attaches: the payload checksum."""
+    return frame_checksum(tree)
+
+
+def check_frame(tree, frame: Tuple[int, int]) -> bool:
+    """Receiver-side verification: True iff the payload is intact."""
+    return frame_checksum(tree) == (int(frame[0]), int(frame[1]))
+
+
+def corrupt_payload(tree, key):
+    """Deterministically corrupt one leaf of a coded payload (simulating
+    wire damage): flips one stored bit of one leaf, chosen by ``key``.
+    Bit-level on the raw buffer, so it works for every wire dtype (int8
+    quants, bf16, bool masks, fp32) and a single flip is always visible
+    to the xor word of the checksum.  Returns a new pytree; the original
+    is untouched."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    nonempty = [i for i, l in enumerate(leaves)
+                if int(np.asarray(l).size)]
+    if not nonempty:
+        return tree
+    tgt = nonempty[int(jax.random.randint(key, (), 0, len(nonempty)))]
+    arr = np.asarray(leaves[tgt])
+    raw = np.frombuffer(arr.tobytes(), np.uint8).copy()
+    k2 = jax.random.fold_in(key, 1)
+    pos = int(jax.random.randint(k2, (), 0, raw.size * 8))
+    if arr.dtype == np.bool_:
+        # a bool byte reinterprets any nonzero value back to True, so
+        # only an LSB flip (a value toggle) survives materialization
+        pos -= pos % 8
+    raw[pos // 8] ^= np.uint8(1 << (pos % 8))
+    leaves = list(leaves)
+    leaves[tgt] = jnp.asarray(
+        np.frombuffer(raw.tobytes(), arr.dtype).reshape(arr.shape))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def corrupt_frame(tree, frame: Tuple[int, int], key):
+    """The full simulated-loss event: damage the payload under ``key``
+    and hand back ``(corrupted_tree, frame)`` for the receiver to check.
+    ``check_frame`` MUST return False on the result whenever the payload
+    has at least one element (asserted in tests and, when
+    ``FaultModel.verify_frames``, live in the event engine)."""
+    return corrupt_payload(tree, key), frame
+
+
+@dataclasses.dataclass(frozen=True)
+class FramedCodec(Codec):
+    """A codec wrapped in the checksum frame: identical math to the
+    inner codec, ``FRAME_BYTES`` heavier on the wire.  Used by the
+    analysis sweep to prove W001/W002 hold over fault-framed channels,
+    and available as a real transport codec for framed runs."""
+
+    inner: Codec = None  # type: ignore[assignment]
+
+    @property
+    def name(self):
+        return f"framed({self.inner.name})"
+
+    @property
+    def is_identity(self):
+        # Framing adds bytes, never changes values — identity-ness (the
+        # "skip coding entirely" fast path) follows the inner codec.
+        return self.inner.is_identity
+
+    @property
+    def stochastic(self):
+        return self.inner.stochastic
+
+    def encode(self, payload, *, key=None):
+        return self.inner.encode(payload, key=key)
+
+    def decode(self, wire, spec):
+        return self.inner.decode(wire, spec)
+
+    def roundtrip(self, payload, *, key=None):
+        return self.inner.roundtrip(payload, key=key)
+
+    def wire_bytes(self, spec) -> int:
+        return int(self.inner.wire_bytes(spec)) + FRAME_BYTES

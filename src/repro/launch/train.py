@@ -38,6 +38,7 @@ from repro.core.accounting import CommMeter, CostModel
 from repro.core.bundle import transformer_bundle
 from repro.core.methods import available_methods
 from repro.core.trainer import Trainer
+from repro.faults import FAULT_MODELS, fault_from_flags
 from repro.network import NETWORK_MODELS, network_from_flags
 from repro.population import Population, VirtualPool
 from repro.sched import COHORT_SAMPLERS, available_policies, \
@@ -152,6 +153,21 @@ def main():
                     help="wall-clock budget per round for "
                          "--scheduler deadline (arrivals past it are "
                          "dropped, FedAvg renormalizes over participants)")
+    ap.add_argument("--faults", default="none",
+                    choices=sorted(FAULT_MODELS),
+                    help="deterministic fault model (repro.faults): lossy "
+                         "wire with checksum-framed retransmission, "
+                         "mid-round client crashes, server outages; 'none' "
+                         "keeps the legacy bitwise path")
+    ap.add_argument("--loss-rate", type=float, default=None,
+                    help="per-transmission loss/corruption probability "
+                         "(default: the --faults preset's)")
+    ap.add_argument("--crash-rate", type=float, default=None,
+                    help="per-client per-round crash probability "
+                         "(default: the --faults preset's)")
+    ap.add_argument("--max-retries", type=int, default=None,
+                    help="retransmission budget per payload before the "
+                         "sender gives up (wire drop)")
     ap.add_argument("--population", type=int, default=0,
                     help="fleet size N: run the cohort engine "
                          "(repro.population) instead of the dense trainer "
@@ -217,6 +233,8 @@ def main():
     # The scheduler plans against the selected network's links (wait_all
     # keeps the legacy barrier and builds no mask machinery at all).
     network = network_from_flags(args.network, args.bandwidth_mbps)
+    faults = fault_from_flags(args.faults, args.loss_rate, args.crash_rate,
+                              args.max_retries)
     pop = None
     if args.population:
         mesh = None
@@ -224,12 +242,13 @@ def main():
             mesh = make_host_mesh(model=1, data=jax.device_count())
         pop = Population(bundle, fsl, population=args.population,
                          data=pool_data, sampler=args.sampler,
-                         network=network, mesh=mesh)
+                         network=network, mesh=mesh, faults=faults)
         trainer = pop.trainer
         pop.init()
     else:
         scheduler = scheduler_from_flags(args.scheduler, args.deadline_s)
-        trainer = Trainer(bundle, fsl, scheduler=scheduler, network=network)
+        trainer = Trainer(bundle, fsl, scheduler=scheduler, network=network,
+                          faults=faults)
         state = trainer.init()
     t0 = time.time()
 
@@ -290,16 +309,32 @@ def main():
               f"{est.model_sync_time:.1f}s model sync over "
               f"{est.agg_events} aggregations)")
     participation = trainer.participation_summary()
-    if participation is not None:
+    if participation is not None and "mean_cohort" in participation:
         print(f"scheduler {args.scheduler!r} participation: "
               f"mean cohort {participation['mean_cohort']}/{fsl.num_clients}"
               + (f", per tier {participation['tier_participation']}"
                  if "tier_participation" in participation else ""))
+    fault_summary = (participation or {}).get("faults")
+    if fault_summary is not None:
+        mean_p = fault_summary["mean_participants"]
+        print(f"faults {args.faults!r}: {fault_summary['retries']} "
+              f"retransmissions "
+              f"({fault_summary['retransmit_bytes']/2**20:.2f} MiB burned, "
+              f"{fault_summary['retry_seconds']:.1f}s backoff), "
+              f"{fault_summary['crash_drops']} crashes, "
+              f"{fault_summary['wire_drops']} wire drops, "
+              f"{fault_summary['outages']} outages survived; "
+              f"mean participants "
+              + ("n/a" if mean_p is None else f"{mean_p:.2f}")
+              + f"/{fsl.num_clients} over {fault_summary['windows']} windows"
+              + (f" ({fault_summary['empty_windows']} empty)"
+                 if fault_summary["empty_windows"] else ""))
     if args.out:
         with open(args.out, "w") as f:
             json.dump({"args": vars(args), "history": history,
                        "comm": meter.as_dict(), "wallclock": wallclock,
                        "participation": participation,
+                       "faults": fault_summary,
                        "population": pop_summary,
                        "memory": pop_memory}, f, indent=1)
 

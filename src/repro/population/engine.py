@@ -37,6 +37,7 @@ counter, so checkpoint resume re-derives cohorts with no sampler state.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Union
 
 import jax
@@ -75,6 +76,13 @@ class Population:
     seed: int = 0
     compute_s: float = 1.0          # per-upload-unit client compute seconds
     server_time: float = 0.05       # per-reply server seconds (blocking)
+    # fault injection (repro.faults): faults are drawn per COHORT SLOT —
+    # slot c of window w is the sampled client occupying it — and crashed/
+    # undelivered slots drop out of the window's FedAvg through the same
+    # masked machinery the dense trainer uses.  Requires refresh=True (the
+    # CSE-FSL global-model semantics): a crashed client's lost local
+    # update is exactly the refresh overwrite.
+    faults: Optional[Any] = None
 
     def __post_init__(self):
         C = self.fsl.num_clients
@@ -82,7 +90,13 @@ class Population:
             raise ValueError(f"population {self.population} < cohort {C}")
         self.trainer = Trainer(self.bundle, self.fsl, donate=self.donate,
                                transport=self.transport,
-                               network=self.network)
+                               network=self.network, faults=self.faults)
+        self.faults = self.trainer.faults
+        if not self.faults.is_null and not self.refresh:
+            raise ValueError(
+                "fault injection needs refresh=True cohort semantics: with "
+                "refresh=False a crashed slot's locally-trained rows would "
+                "enter the sparse cache as if aggregated")
         self.network = self.trainer.network
         self.sampler = resolve_cohort(self.sampler, seed=self.seed)
         self._unit = self.trainer.method.unit_batches(self.fsl)
@@ -97,6 +111,12 @@ class Population:
         self._records: List[Dict[str, Any]] = []
         self._payload_bytes = None
         self._tier_spans = None
+        # fault runs: the global row at the current window's entry, kept so
+        # a zero-participant window (in-scan FedAvg no-op) can be unwound —
+        # the next cohort must inherit the last aggregated model, not the
+        # dirty locally-trained rows the no-op left behind
+        self._entry_row: Optional[Dict[str, Any]] = None
+        self._window_empty = False
 
     # -- lazy per-client state ---------------------------------------------
     @property
@@ -144,6 +164,21 @@ class Population:
             self._restack(self.cohort_for(window))
         self._window = window
 
+    def _close_window(self, state):
+        """Fault runs only: repair a zero-participant window and snapshot
+        the entry row of the next one.  Called at every window boundary —
+        if the finished window aggregated nobody, every row is restacked
+        from the window-entry global row; otherwise the rows already ARE
+        the new global model, and row 0 becomes the next entry snapshot."""
+        if self._window_empty:
+            stacked = {k: tree_stack([self._entry_row[k]] * self.cohort_size)
+                       for k in self._stacked}
+            state = {**state, **stacked}
+            self._window_empty = False
+        self._entry_row = {k: jax.tree_util.tree_map(lambda x: x[0], state[k])
+                           for k in self._stacked}
+        return state
+
     def _place(self):
         """Shard the cohort state over the mesh (no-op without one)."""
         if self.mesh is None:
@@ -171,6 +206,9 @@ class Population:
             // self.fsl.h
         self._window = self.window_of(rnd)
         self.cohort_for(self._window)
+        if not self.faults.is_null:
+            self._entry_row = dict(self._default)
+            self._window_empty = False
         self._place()
         return self
 
@@ -292,12 +330,18 @@ class Population:
         tree = {"state": self._state, "default": self._default}
         if cache_ids:
             tree["cache"] = tree_stack([self._cache[i] for i in cache_ids])
+        if self._entry_row is not None:
+            # fault runs: the current window's entry row must survive a
+            # mid-window restart for the empty-window recovery to replay
+            # bitwise against the uninterrupted run
+            tree["entry"] = self._entry_row
         step = int(np.asarray(self._state["round"]))
         ckpt.save(path, tree, step=step,
                   extra={"population": self.population,
                          "cohort": self.cohort_size,
                          "refresh": self.refresh,
                          "sampler": self.sampler.name,
+                         "has_entry": self._entry_row is not None,
                          "cache_ids": [int(i) for i in cache_ids]})
 
     def restore(self, path: str):
@@ -327,10 +371,21 @@ class Population:
             like["cache"] = jax.tree_util.tree_map(
                 lambda x: jax.ShapeDtypeStruct((len(cache_ids),) + x.shape,
                                                x.dtype), row_abs)
+        has_entry = bool(extra.get("has_entry", False))
+        if has_entry:
+            like["entry"] = row_abs
         tree = ckpt.restore(path, like)
         dev = lambda t: jax.tree_util.tree_map(jnp.asarray, t)
         self._state = dev(tree["state"])
         self._default = dev(tree["default"])
+        if has_entry:
+            self._entry_row = dev(tree["entry"])
+        elif not self.faults.is_null:
+            # pre-fault checkpoint resumed into a fault run: best effort —
+            # valid whenever the checkpoint sits on a window boundary
+            self._entry_row = {k: jax.tree_util.tree_map(
+                lambda x: x[0], self._state[k]) for k in self._stacked}
+        self._window_empty = False
         self._cache = {}
         if cache_ids:
             cache = dev(tree["cache"])
@@ -364,22 +419,40 @@ class Population:
         """
         if self._state is None:
             raise RuntimeError("call init() or restore() before run()")
+        from repro.faults import FRAME_BYTES, accumulate_round
         t = self.trainer
         state = self._state
         rnd0 = t.method.batches_trained(self.fsl, state) // self.fsl.h
         pool = self.data.device_pool()
         history: List[dict] = []
         profile = None
+        C = self.cohort_size
+        fault_active = not self.faults.is_null
+        blocking = t.method.downloads_gradients
+        ftrace = fstats = surv = part = part_dev = None
+        unit_bytes = ms_pair = None
+        dropped_updates = 0
+        if fault_active:
+            ftrace = t._plan_faults(rnd0 + num_rounds)
+            fstats = t._fault_stats
+            surv = ftrace.survives(blocking)
+            part = np.ones(C, bool)
+            part_dev = jnp.ones(C, jnp.float32)
         done = 0
         while done < num_rounds:
             r0 = rnd0 + done
             w0 = self.window_of(r0)
             if w0 != self._window:
+                if fault_active:
+                    state = self._close_window(state)
                 self._state = state
                 self._advance_window(w0)
                 state = self._state
             seg = min(chunk, num_rounds - done)
-            if not self.refresh:
+            if not self.refresh or fault_active:
+                # faults also cut segments at window boundaries, so an
+                # empty window can be repaired host-side before the next
+                # cohort trains on its rows
                 s = 1
                 while s < seg and self.window_of(r0 + s) == w0:
                     s += 1
@@ -409,20 +482,64 @@ class Population:
             idx = jnp.asarray(np.stack(plans))
             lrs = jnp.asarray([t.lr_at(r0 + i) for i in range(seg)],
                               jnp.float32)
-            state, metrics, agg_mask = t.pool_chunk_fn(state, pool, idx,
-                                                       lrs)
+            if fault_active:
+                mk = jnp.asarray(surv[r0:r0 + seg], jnp.float32)
+                state, metrics, agg_mask, part_dev = t.masked_pool_chunk_fn(
+                    state, pool, idx, lrs, mk, part_dev)
+            else:
+                state, metrics, agg_mask = t.pool_chunk_fn(state, pool, idx,
+                                                           lrs)
             agg_mask = np.asarray(agg_mask)
             metrics = {k: np.asarray(v) for k, v in metrics.items()}
             for i in range(seg):
+                rnd = r0 + i
+                aggregated = bool(agg_mask[i])
+                extra = ms_bytes = wire = None
+                if fault_active:
+                    part &= surv[rnd]
+                    if profile is not None:
+                        if unit_bytes is None:
+                            unit_bytes = profile.unit_wire_bytes(
+                                C, t._uploads_per_round())
+                        wire = accumulate_round(fstats, self.faults, ftrace,
+                                                rnd, *unit_bytes, blocking,
+                                                FRAME_BYTES)
+                    if aggregated:
+                        k = int(part.sum())
+                        if k == 0:
+                            self._window_empty = True
+                            warnings.warn(
+                                f"fault model {self.faults.name!r} admitted "
+                                f"no clients at the round-{rnd + 1} "
+                                "aggregation; FedAvg skipped (no-op)")
+                        dropped_updates += C - k
+                        fstats.windows += 1
+                        fstats.participants.append(k)
+                        if k == 0:
+                            fstats.empty_windows += 1
+                        extra = {"participants": k,
+                                 "dropped_updates": dropped_updates,
+                                 "fault_retries": fstats.retries,
+                                 "fault_drops": (fstats.crash_drops
+                                                 + fstats.wire_drops)}
+                        if profile is not None:
+                            if ms_pair is None:
+                                ms_pair = t._model_sync_wire_pair()
+                            ms_bytes = 0 if k == 0 \
+                                else k * ms_pair[0] + C * ms_pair[1]
+                        part[:] = True
                 t._log_round(
-                    r0 + i, rnd0, bool(agg_mask[i]),
+                    rnd, rnd0, aggregated,
                     lambda: {k: float(v[i]) for k, v in metrics.items()},
-                    profile, meter, log_every, callback, history, state)
+                    profile, meter, log_every, callback, history, state,
+                    extra=extra, model_sync_bytes=ms_bytes, wire_bytes=wire)
             done += seg
         self._state = state
         # a segment can END exactly on a window boundary — enter the new
         # window now so caches/cohorts are current for save()/stats
         w_next = self.window_of(rnd0 + num_rounds)
         if w_next != self._window:
+            if fault_active:
+                self._state = self._close_window(self._state)
             self._advance_window(w_next)
         return self._state, history

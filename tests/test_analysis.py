@@ -13,6 +13,7 @@ import pytest
 
 from repro.analysis import (RULES, Violation, apply_waivers,
                             assert_x64_disabled, audit_chunk,
+                            audit_faults, audit_framed_wire,
                             audit_kernels, audit_prng, audit_registry,
                             audit_wire_contracts, chunk_matrix,
                             donation_report, find_callbacks,
@@ -195,6 +196,59 @@ def test_channel_salts_are_the_contract():
 
 
 # ---------------------------------------------------------------------------
+# F001: fault-injection stream discipline + framed wire transparency
+# ---------------------------------------------------------------------------
+
+
+def test_seeded_f001_retry_fold_collision(monkeypatch):
+    # RETRY_FOLD = 0 lands the retry stream exactly on the uplink
+    # channel's unit-0 fold (unit * 2 + salt with salt=0): the checker
+    # must catch the coupling before any fault run draws corrupted bits
+    # from a codec's rounding stream
+    import repro.faults.model as fmod
+    monkeypatch.setattr(fmod, "RETRY_FOLD", 0)
+    vs = audit_faults()
+    f = [v for v in vs if v.rule == "F001"]
+    assert f and "collides with a codec stream" in f[0].message
+    assert f[0].combo == "faults"
+
+
+def test_seeded_f001_internal_retry_collision(monkeypatch):
+    from repro.faults import retry_key as real_retry
+
+    def folded_retry(transport, unit, client=None):
+        return real_retry(transport, unit % 2, client=client)
+
+    import repro.faults.model as fmod
+    monkeypatch.setattr(fmod, "retry_key", folded_retry)
+    import repro.faults as fpkg
+    monkeypatch.setattr(fpkg, "retry_key", folded_retry)
+    vs = audit_faults()
+    f = [v for v in vs if v.rule == "F001"]
+    assert f and "between units" in f[0].message
+
+
+def test_audit_faults_clean():
+    assert audit_faults() == []
+
+
+def test_seeded_w001_framed_sweep(monkeypatch, bundle):
+    class LyingSpecs(CSEFSL):
+        def payload_specs(self, bundle, fsl, batch):
+            up, reply = super().payload_specs(bundle, fsl, batch)
+            bad = jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct((1,) + tuple(x.shape),
+                                               x.dtype), up)
+            return bad, reply
+
+    _patch_method(monkeypatch, "cse_fsl", LyingSpecs())
+    vs = audit_framed_wire("cse_fsl", bundle=bundle)
+    w = [v for v in vs if v.rule == "W001"]
+    assert w and "framed" in w[0].message
+    assert "framed=True" in w[0].combo
+
+
+# ---------------------------------------------------------------------------
 # R001: recompilation guard
 # ---------------------------------------------------------------------------
 
@@ -362,7 +416,7 @@ def test_waivers_mark_but_keep_violations():
 
 def test_rule_catalogue_covers_all_emitted_rules():
     assert set(RULES) == {"W001", "W002", "W003", "C001", "C002", "D001",
-                          "P001", "R001", "A001", "A002", "A003"}
+                          "P001", "F001", "R001", "A001", "A002", "A003"}
 
 
 def test_specs_equal_reports_first_mismatch():
@@ -386,10 +440,12 @@ def test_clean_tree_has_zero_violations(bundle):
     from repro.core.methods import available_methods
     vs = []
     vs += audit_prng()
+    vs += audit_faults()
     vs += audit_registry(bundle=bundle)
     vs += audit_kernels()
     for nm in available_methods():
         vs += audit_wire_contracts(nm, bundle=bundle)
+        vs += audit_framed_wire(nm, bundle=bundle)
     # one representative coded chunk per blocking/non-blocking shape
     for combo in (("cse_fsl", "int8", True), ("fsl_mc", "int8", False)):
         cv, fp = audit_chunk(combo[0], combo[1], masked=combo[2],

@@ -1,0 +1,537 @@
+"""repro.faults contracts: deterministic fault injection across engines.
+
+1. Trace discipline: seeded determinism, prefix-consistency across
+   horizons (the checkpoint-resume invariant), crash semantics (pre vs
+   during upload), survival masks.
+2. Checksum frame: single-bit corruption is always detected, for every
+   wire dtype; ``FramedCodec`` is numerically transparent and exactly
+   ``FRAME_BYTES`` heavier per payload.
+3. Zero-fault identity: ``faults=None`` and ``faults="none"`` build zero
+   fault machinery and stay bitwise-identical (state, history, meter —
+   including the meter's legacy key set) in all four engines.
+4. Determinism + engine parity: same seed reproduces identical retries /
+   drops / bytes / final params across two runs; ``run`` ≡
+   ``run_compiled`` bitwise under crashes.
+5. Exact byte accounting: meter totals equal the trace-derived attempt
+   counts times the per-unit wire bytes — retransmissions and frames
+   billed exactly, never averaged.
+6. Degenerate windows: an all-clients-crashed window is a warned no-op
+   that bills no model sync, divides nothing by zero, and (population)
+   hands the next cohort the pre-window global model.
+7. Crash recovery: kill at round k, ``repro.checkpoint`` restore,
+   continue — bitwise vs the uninterrupted run, in the loop, the
+   compiled runner (killed mid-chunk), the event engine, and the
+   population engine, for all four methods.
+"""
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.configs.base import FSLConfig
+from repro.core.accounting import CommMeter, CostModel
+from repro.core.async_trainer import AsyncTrainer, LatencyTrace, \
+    make_latency
+from repro.core.bundle import cnn_bundle
+from repro.core.trainer import Trainer
+from repro.data import FederatedBatcher, partition_iid, \
+    synthetic_classification
+from repro.faults import (FAULT_MODELS, FRAME_BYTES, CrashyClients,
+                          FaultModel, FramedCodec, LossyWire, NoFaults,
+                          OutageServer, check_frame, corrupt_frame,
+                          fault_from_flags, make_fault, make_frame,
+                          register_fault, resolve_fault, retry_key)
+from repro.models.cnn import CNNConfig
+from repro.population import FederatedPool, Population, VirtualPool
+from repro.transport import get_codec
+
+ALL_METHODS = ("cse_fsl", "fsl_mc", "fsl_oc", "fsl_an")
+SMOKE = CNNConfig("smoke_cnn", (8, 8, 1), 10, conv_channels=(2, 2), kernel=3,
+                  server_widths=(8,), aux_channels=2, lrn=False)
+MIX = FaultModel(loss_rate=0.25, crash_rate=0.25, outage_rate=0.2, seed=11,
+                 name="mix")
+
+
+@pytest.fixture(scope="module")
+def bundle():
+    return cnn_bundle(SMOKE)
+
+
+def _setup(method, n=2, h=2, agg_every=0, codec="none"):
+    fsl = FSLConfig(num_clients=n, h=h, method=method, agg_every=agg_every,
+                    codec=codec,
+                    grad_clip=1.0 if method == "fsl_oc" else 0.0)
+    x, y = synthetic_classification(24 * n, (8, 8, 1), 10, seed=0,
+                                    signal=12.0)
+    return fsl, partition_iid(x, y, n, seed=0)
+
+
+def _cm(n):
+    return CostModel(n=n, q=8, d_local=24, w_client=100, w_server=100,
+                     aux=10)
+
+
+def _batcher(fsl, fed):
+    return FederatedBatcher(fed, 4, fsl.h, seed=0)
+
+
+def _advance(batcher, k):
+    """Model data-schedule persistence across a process kill: the stream
+    is a pure function of the seed, so the resumed process fast-forwards
+    to where the dead one stopped."""
+    for _ in range(k):
+        batcher.next_round_indices()
+
+
+def _eq(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# 1. trace discipline
+# ---------------------------------------------------------------------------
+
+
+def test_trace_deterministic_and_prefix_consistent():
+    fm = FaultModel(loss_rate=0.3, crash_rate=0.2, outage_rate=0.2, seed=5)
+    a, b = fm.trace(8, 3, 2), fm.trace(8, 3, 2)
+    for f in ("up_attempts", "up_ok", "down_attempts", "down_ok", "crash",
+              "outage"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f))
+        # horizon-independence: round r is identical under any horizon —
+        # the invariant checkpoint-resumed runs ride on
+        np.testing.assert_array_equal(getattr(a, f),
+                                      getattr(fm.trace(20, 3, 2), f)[:8])
+    assert fm.trace(0, 3, 2).up_attempts.shape == (0, 3, 2)
+
+
+def test_trace_crash_semantics():
+    tr = FaultModel(crash_rate=1.0, seed=0).trace(40, 4, 3)
+    pre, dur = tr.crash == 1, tr.crash == 2
+    assert pre.any() and dur.any() and not (tr.crash == 0).any()
+    # crash-before: nothing transmitted; crash-during: ONE partial unit
+    assert (tr.up_attempts[pre] == 0).all()
+    assert (tr.up_attempts[dur][:, 0] == 1).all()
+    assert (tr.up_attempts[dur][:, 1:] == 0).all()
+    assert not tr.up_ok[pre | dur].any()
+    assert not tr.survives(False).any()
+
+
+def test_trace_lossless_is_clean():
+    tr = NoFaults().trace(5, 3, 2)
+    assert (tr.up_attempts == 1).all() and tr.up_ok.all()
+    assert (tr.crash == 0).all() and not tr.outage.any()
+    assert tr.survives(True).all()
+
+
+def test_survives_blocking_includes_downlink():
+    fm = FaultModel(loss_rate=0.6, max_retries=0, seed=3)
+    tr = fm.trace(30, 4, 2)
+    s_nb, s_b = tr.survives(False), tr.survives(True)
+    assert (s_b <= s_nb).all() and (s_b < s_nb).any()
+
+
+def test_registry_and_flags():
+    assert {"none", "lossy", "crashy", "outage"} <= set(FAULT_MODELS)
+    assert resolve_fault(None).is_null
+    assert resolve_fault("none").is_null
+    assert resolve_fault(MIX) is MIX
+    assert isinstance(make_fault("lossy"), LossyWire)
+    with pytest.raises(KeyError, match="unknown fault model"):
+        make_fault("bogus")
+    with pytest.raises(ValueError, match="duplicate fault model"):
+        register_fault(CrashyClients)
+    fm = fault_from_flags("lossy", loss_rate=0.5, max_retries=7, seed=2)
+    assert (fm.loss_rate, fm.max_retries, fm.seed) == (0.5, 7, 2)
+    assert fault_from_flags("crashy").crash_rate == CrashyClients().crash_rate
+    assert fault_from_flags("none", loss_rate=0.9).is_null
+
+
+def test_expected_attempts_and_backoff():
+    fm = FaultModel(loss_rate=0.5, max_retries=2, backoff_base=0.1,
+                    backoff_cap=0.15)
+    assert fm.expected_attempts() == pytest.approx(1 + 0.5 + 0.25)
+    assert NoFaults().expected_attempts() == 1.0
+    assert fm.backoff_seconds(1) == 0.0
+    assert fm.backoff_seconds(3) == pytest.approx(0.1 + 0.15)
+
+
+# ---------------------------------------------------------------------------
+# 2. the checksum frame
+# ---------------------------------------------------------------------------
+
+
+def test_frame_detects_single_bit_corruption_all_dtypes():
+    key = jax.random.PRNGKey(0)
+    for dtype in (np.float32, np.int8, np.uint32, jnp.bfloat16, np.bool_):
+        payload = {"x": jnp.asarray(np.arange(24).reshape(2, 3, 4) % 2,
+                                    dtype)}
+        frame = make_frame(payload)
+        assert check_frame(payload, frame)
+        for i in range(8):
+            bad, fr = corrupt_frame(payload, frame,
+                                    jax.random.fold_in(key, i))
+            assert not check_frame(bad, fr), dtype
+    # empty payloads cannot be corrupted, only passed through
+    empty = {"x": jnp.zeros((0,), jnp.float32)}
+    bad, fr = corrupt_frame(empty, make_frame(empty), key)
+    assert check_frame(bad, fr)
+
+
+def test_framed_codec_transparent_and_heavier():
+    payload = jnp.asarray(np.random.default_rng(0).normal(size=(4, 6)),
+                          jnp.float32)
+    spec = jax.ShapeDtypeStruct((4, 6), jnp.float32)
+    for name in ("none", "int8", "topk"):
+        inner = get_codec(name)
+        framed = FramedCodec(inner)
+        assert framed.name == f"framed({name})"
+        assert framed.is_identity == inner.is_identity
+        assert framed.stochastic == inner.stochastic
+        key = jax.random.PRNGKey(1) if inner.stochastic else None
+        np.testing.assert_array_equal(
+            np.asarray(framed.roundtrip(payload, key=key)),
+            np.asarray(inner.roundtrip(payload, key=key)))
+        assert framed.wire_bytes(spec) == inner.wire_bytes(spec) \
+            + FRAME_BYTES
+
+
+def test_retry_key_distinct_from_channel_keys():
+    from repro.transport import CHANNEL_SALTS, Transport
+    tp = Transport()
+    chan = {np.asarray(tp.unit_key(u, salt=s)).tobytes()
+            for s in CHANNEL_SALTS.values() for u in range(16)}
+    for u in range(16):
+        assert np.asarray(retry_key(tp, u)).tobytes() not in chan
+        assert np.asarray(retry_key(tp, u, client=1)).tobytes() not in chan
+
+
+# ---------------------------------------------------------------------------
+# 3. zero-fault identity (the frozen legacy path)
+# ---------------------------------------------------------------------------
+
+
+def _run_engine(engine, method, faults, bundle, rounds=5, chunk=3,
+                fed_override=None):
+    fsl, fed = _setup(method)
+    if fed_override is not None:
+        fed = fed_override
+    meter = CommMeter()
+    cm = _cm(fsl.num_clients)
+    if engine == "population":
+        pop = Population(bundle, fsl, population=fsl.num_clients,
+                         data=FederatedPool(fed, 4, fsl.h, seed=0),
+                         donate=False, faults=faults)
+        pop.init(seed=0)
+        state, hist = pop.run(rounds, chunk=chunk, log_every=1, meter=meter,
+                              cost_model=cm)
+        return state, hist, meter, pop.trainer
+    if engine == "async":
+        tr = AsyncTrainer(bundle, fsl, latency=make_latency("lognormal"),
+                          seed=3, faults=faults)
+        state = tr.init(0)
+        state, hist = tr.run(state, _batcher(fsl, fed), rounds, log_every=1,
+                             meter=meter, cost_model=cm)
+        return state, hist, meter, tr
+    tr = Trainer(bundle, fsl, donate=False, faults=faults)
+    state = tr.init(0)
+    if engine == "compiled":
+        state, hist = tr.run_compiled(state, _batcher(fsl, fed), rounds,
+                                      chunk=chunk, log_every=1, meter=meter,
+                                      cost_model=cm)
+    else:
+        state, hist = tr.run(state, _batcher(fsl, fed), rounds, log_every=1,
+                             meter=meter, cost_model=cm)
+    return state, hist, meter, tr
+
+
+@pytest.mark.parametrize("engine", ["loop", "compiled", "async",
+                                    "population"])
+def test_zero_fault_identity(engine, bundle):
+    sa, ha, ma, ta = _run_engine(engine, "cse_fsl", None, bundle)
+    sb, hb, mb, tb = _run_engine(engine, "cse_fsl", "none", bundle)
+    _eq(sa, sb)
+    assert ha == hb
+    assert ma.as_dict() == mb.as_dict()
+    # the legacy meter key set is frozen: no fault machinery, no frame key
+    assert "fault_frames" not in ma.counts
+    assert not any("fault" in k or "participants" in k
+                   for row in ha for k in row)
+    assert ta.participation_summary() is None
+    assert tb.participation_summary() is None
+
+
+# ---------------------------------------------------------------------------
+# 4. determinism + engine parity under faults
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ["loop", "compiled", "async",
+                                    "population"])
+def test_two_run_determinism_under_faults(engine, bundle):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        sa, ha, ma, ta = _run_engine(engine, "fsl_mc", MIX, bundle)
+        sb, hb, mb, tb = _run_engine(engine, "fsl_mc", MIX, bundle)
+    _eq(sa, sb)
+    assert ha == hb
+    assert ma.as_dict() == mb.as_dict()
+    fa = ta.participation_summary()["faults"]
+    assert fa == tb.participation_summary()["faults"]
+    assert fa["retries"] > 0 and fa["windows"] > 0
+
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_loop_equals_compiled_under_faults(method, bundle):
+    fm = CrashyClients(crash_rate=0.4, loss_rate=0.15, seed=7)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        sa, ha, ma, ta = _run_engine("loop", method, fm, bundle, rounds=6)
+        sb, hb, mb, tb = _run_engine("compiled", method, fm, bundle,
+                                     rounds=6, chunk=4)
+    _eq(sa, sb)
+    assert ha == hb
+    assert ma.as_dict() == mb.as_dict()
+    assert ta.participation_summary()["faults"] \
+        == tb.participation_summary()["faults"]
+
+
+def test_fault_rows_carry_participation_columns(bundle):
+    _, hist, meter, tr = _run_engine("loop", "cse_fsl",
+                                     LossyWire(loss_rate=0.3, seed=2),
+                                     bundle)
+    agg_rows = [r for r in hist if r["aggregated"]]
+    assert agg_rows
+    for row in agg_rows:
+        assert {"participants", "dropped_updates", "fault_retries",
+                "fault_drops", "comm_bytes"} <= set(row)
+    assert meter.counts["fault_frames"] > 0
+
+
+# ---------------------------------------------------------------------------
+# 5. exact byte accounting
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["cse_fsl", "fsl_mc"])
+def test_exact_retransmission_byte_accounting(method, bundle):
+    """Meter totals must equal the trace-derived attempt counts times the
+    per-unit wire bytes — computed here independently of the engines."""
+    fm = LossyWire(loss_rate=0.35, seed=4)
+    rounds = 5
+    _, _, meter, tr = _run_engine("loop", method, fm, bundle, rounds=rounds)
+    prof = tr.comm_profile(_cm(tr.fsl.num_clients), 4)
+    n, K = tr.fsl.num_clients, tr._uploads_per_round()
+    per_up, per_label, per_down = prof.unit_wire_bytes(n, K)
+    trace = fm.trace(rounds, n, K)
+    up_att = int(trace.up_attempts.sum())
+    assert meter.counts["uplink_smashed"] == per_up * up_att
+    assert meter.counts["uplink_labels"] == per_label * up_att
+    frames = FRAME_BYTES * up_att
+    if tr.method.downloads_gradients:
+        down_att = int(trace.down_attempts.sum())
+        assert meter.counts["downlink_grads"] == per_down * down_att
+        frames += FRAME_BYTES * down_att
+    else:
+        assert meter.counts["downlink_grads"] == 0
+    assert meter.counts["fault_frames"] == frames
+    fs = tr.participation_summary()["faults"]
+    retr_up = int(np.maximum(trace.up_attempts - 1, 0).sum())
+    expect = retr_up * (per_up + per_label + FRAME_BYTES)
+    if tr.method.downloads_gradients:
+        retr_down = int(np.maximum(trace.down_attempts - 1, 0).sum())
+        expect += retr_down * (per_down + FRAME_BYTES)
+    assert fs["retransmit_bytes"] == expect
+    assert fs["frame_bytes"] == frames
+
+
+def test_wallclock_estimate_failure_aware(bundle):
+    from repro.network import UniformNetwork
+    fsl, fed = _setup("cse_fsl")
+    net = UniformNetwork()
+    tr0 = Trainer(bundle, fsl, donate=False, network=net)
+    trf = Trainer(bundle, fsl, donate=False, network=net,
+                  faults=LossyWire(loss_rate=0.4, seed=1))
+    cm = _cm(fsl.num_clients)
+    batch = _batcher(fsl, fed).next_round()
+    clean = tr0.wallclock_estimate(cm, 4, 10, net, batch=batch)
+    faulty = trf.wallclock_estimate(cm, 4, 10, net, batch=batch)
+    assert faulty.total > clean.total
+    # the explicit override beats the trainer's own model
+    clean2 = trf.wallclock_estimate(cm, 4, 10, net, batch=batch,
+                                    faults="none")
+    assert clean2.total == clean.total
+
+
+# ---------------------------------------------------------------------------
+# 6. degenerate windows: everyone crashed
+# ---------------------------------------------------------------------------
+
+
+def _all_crash():
+    return FaultModel(crash_rate=1.0, seed=0, name="allcrash")
+
+
+@pytest.mark.parametrize("engine", ["loop", "compiled", "async"])
+def test_all_crashed_window_is_noop(engine, bundle):
+    with pytest.warns(UserWarning, match="admitted no clients"):
+        state, hist, meter, tr = _run_engine(engine, "cse_fsl",
+                                             _all_crash(), bundle,
+                                             rounds=4)
+    fs = tr.participation_summary()["faults"]
+    assert fs["windows"] == fs["empty_windows"] > 0
+    assert fs["mean_participants"] == 0.0
+    assert fs["min_live_participants"] is None
+    # empty cohort: no model-sync bytes move
+    assert meter.counts["model_sync"] == 0
+
+
+def test_population_empty_window_resets_to_global_row(bundle):
+    """A zero-participant window must NOT leak its locally-trained rows
+    into the next cohort: the engine restacks from the window-entry
+    global model (here the init model, since every window is empty)."""
+    with pytest.warns(UserWarning, match="admitted no clients"):
+        state, _, meter, tr = _run_engine("population", "cse_fsl",
+                                          _all_crash(), bundle, rounds=4)
+    assert meter.counts["model_sync"] == 0
+    fsl, fed = _setup("cse_fsl")
+    ref = Population(cnn_bundle(SMOKE), fsl, population=fsl.num_clients,
+                     data=FederatedPool(fed, 4, fsl.h, seed=0),
+                     donate=False).init(seed=0)
+    for k in ("clients", "servers"):
+        if k not in state:
+            continue
+        for got, want in zip(jax.tree_util.tree_leaves(state[k]),
+                             jax.tree_util.tree_leaves(ref._state[k])):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_population_faults_require_refresh(bundle):
+    fsl, fed = _setup("cse_fsl")
+    with pytest.raises(ValueError, match="refresh=True"):
+        Population(bundle, fsl, population=fsl.num_clients,
+                   data=FederatedPool(fed, 4, fsl.h, seed=0),
+                   refresh=False, faults=LossyWire())
+
+
+# ---------------------------------------------------------------------------
+# 7. kill at round k -> checkpoint restore -> continue, bitwise
+# ---------------------------------------------------------------------------
+
+_R, _K = 6, 3                       # kill mid-horizon; chunk=4 => mid-chunk
+
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_kill_restore_loop_and_compiled_bitwise(method, bundle, tmp_path):
+    fsl, fed = _setup(method)
+    path = os.path.join(tmp_path, "dense")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        # uninterrupted references
+        full = {}
+        for engine in ("loop", "compiled"):
+            full[engine] = _run_engine(engine, method, MIX, bundle,
+                                       rounds=_R, chunk=4,
+                                       fed_override=fed)[0]
+        # killed at _K (mid-chunk for the compiled runner), restored into
+        # a FRESH trainer, continued for the rest
+        for engine in ("loop", "compiled"):
+            tr = Trainer(bundle, fsl, donate=False, faults=MIX)
+            b = _batcher(fsl, fed)
+            state = tr.init(0)
+            runner = tr.run if engine == "loop" else \
+                (lambda s, bt, r: tr.run_compiled(s, bt, r, chunk=4))
+            state, _ = runner(state, b, _K)
+            ckpt.save(path, state, step=int(np.asarray(state["round"])))
+            del tr, state
+            tr2 = Trainer(bundle, fsl, donate=False, faults=MIX)
+            like = tr2.init(0)
+            restored = ckpt.restore(path, like)
+            restored = jax.tree_util.tree_map(jnp.asarray, restored)
+            b2 = _batcher(fsl, fed)
+            _advance(b2, _K)
+            runner2 = tr2.run if engine == "loop" else \
+                (lambda s, bt, r: tr2.run_compiled(s, bt, r, chunk=4))
+            final, _ = runner2(restored, b2, _R - _K)
+            _eq(full[engine], final)
+
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_kill_restore_async_bitwise(method, bundle, tmp_path):
+    fsl, fed = _setup(method)
+    n, path = fsl.num_clients, os.path.join(tmp_path, "async")
+
+    def trainer():
+        return AsyncTrainer(bundle, fsl, latency=make_latency("lognormal"),
+                            seed=3, faults=MIX)
+
+    tr = trainer()
+    K = tr.hooks.uploads_per_round
+    # ONE latency trace, sliced — latencies are the event engine's data
+    # stream; the fault trace is absolute-indexed and re-derived
+    trace = make_latency("lognormal").draw(np.random.default_rng(3), _R, n,
+                                           K)
+    cut = lambda lo, hi: LatencyTrace(trace.compute[lo:hi],
+                                      trace.up[lo:hi], trace.down[lo:hi])
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        state = tr.init(0)
+        full, _ = tr.run(state, _batcher(fsl, fed), _R, trace=cut(0, _R))
+        t1 = trainer()
+        state, _ = t1.run(t1.init(0), _batcher(fsl, fed), _K,
+                          trace=cut(0, _K))
+        ckpt.save(path, state, step=int(np.asarray(state["round"])))
+        del t1, state
+        t2 = trainer()
+        restored = jax.tree_util.tree_map(
+            jnp.asarray, ckpt.restore(path, t2.init(0)))
+        b2 = _batcher(fsl, fed)
+        _advance(b2, _K)
+        final, _ = t2.run(restored, b2, _R - _K, trace=cut(_K, _R))
+    _eq(full, final)
+
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_kill_restore_population_bitwise(method, bundle, tmp_path):
+    fsl, _ = _setup(method)
+    path = os.path.join(tmp_path, "pop")
+
+    def pop():
+        # VirtualPool: round_indices pure in (seed, client, round), so the
+        # resumed process re-derives the dead one's data plan from scratch
+        # (FederatedPool's cursor-advancing batcher would need fast-
+        # forwarding, like _advance does for the dense engines)
+        vp = VirtualPool.synthetic((8, 8, 1), 10, pool_size=96, d_local=24,
+                                   batch_size=4, h=fsl.h, seed=0)
+        return Population(bundle, fsl, population=fsl.num_clients, data=vp,
+                          donate=False, faults=MIX)
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        full, _ = pop().init(seed=0).run(_R, chunk=4)
+        p1 = pop().init(seed=0)
+        p1.run(_K, chunk=4)
+        p1.save(path)
+        del p1
+        final, _ = pop().restore(path).run(_R - _K, chunk=4)
+    _eq(full, final)
+
+
+def test_outage_recovery_counted_and_survived(bundle):
+    fm = OutageServer(outage_rate=0.6, outage_s=9.0, seed=2)
+    state, hist, _, tr = _run_engine("async", "cse_fsl", fm, bundle,
+                                     rounds=6)
+    fs = tr.participation_summary()["faults"]
+    assert fs["outages"] == fs["recovery_events"] > 0
+    assert fs["crash_drops"] == 0 and fs["wire_drops"] == 0
+    # outages stall the clock but never the math: every round aggregates
+    assert all(r["participants"] == tr.fsl.num_clients
+               for r in hist if r["aggregated"])
+    assert np.isfinite(hist[-1]["sim_time"])
