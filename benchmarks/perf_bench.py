@@ -119,6 +119,45 @@ def bench_one(cfg, method: str, h: int, rounds: int, chunk: int,
     }
 
 
+def bench_telemetry_overhead(rounds: int, chunk: int,
+                             method: str = "cse_fsl", n: int = 2,
+                             batch_size: int = 2, seed: int = 0):
+    """Telemetry-overhead guard (rule T001's perf half): the compiled
+    runner's steady-state steps/s with a live recorder divided by the
+    no-op baseline.  The recorder only appends to host-side lists after
+    the per-chunk fetch the engine already does, so the ratio must stay
+    ~1; the assertion bar rides REPRO_TELEMETRY_MIN_RATIO (CI lowers it
+    slightly for shared-runner jitter)."""
+    from repro.telemetry import Telemetry
+    bundle = cnn_bundle(SMOKE)
+    x, y = synthetic_classification(240, SMOKE.in_shape, SMOKE.num_classes,
+                                    seed=seed, signal=12.0)
+    fed = partition_iid(x, y, n, seed=seed)
+    fsl = FSLConfig(num_clients=n, h=1, lr=0.05, method=method)
+
+    def steady(telemetry):
+        tr = Trainer(bundle, fsl, telemetry=telemetry)
+        state = tr.init(seed)
+        batcher = FederatedBatcher(fed, batch_size, 1, seed=seed)
+        (state, _), _ = _timed(
+            lambda: tr.run_compiled(state, batcher, chunk, chunk=chunk))
+        best = float("inf")
+        for _ in range(3):
+            (state, _), t = _timed(
+                lambda: tr.run_compiled(state, batcher, rounds,
+                                        chunk=chunk))
+            best = min(best, t)
+        return rounds / best
+
+    off_sps = steady(None)
+    on_sps = steady(Telemetry())
+    return {"arch": SMOKE.name, "method": method, "rounds": rounds,
+            "chunk": chunk,
+            "telemetry_off_steps_per_s": round(off_sps, 2),
+            "telemetry_on_steps_per_s": round(on_sps, 2),
+            "telemetry_overhead_ratio": round(on_sps / off_sps, 3)}
+
+
 def main(smoke: bool = False):
     rounds, chunk = (80, 20) if smoke else (160, 40)
     rows = []
@@ -151,7 +190,17 @@ def main(smoke: bool = False):
         if r["arch"] == SMOKE.name and r["h"] == 1:
             assert r["speedup"] >= min_speedup, r
 
+    # Telemetry must be free: enabled/disabled compiled steps/s on the
+    # dispatch-dominated smoke CNN — the worst case for any added host
+    # work — must stay within a few percent of 1.0.
+    tele = bench_telemetry_overhead(rounds, chunk)
+    table([tele], ["arch", "method", "telemetry_off_steps_per_s",
+                   "telemetry_on_steps_per_s", "telemetry_overhead_ratio"])
+    min_ratio = float(os.environ.get("REPRO_TELEMETRY_MIN_RATIO", "0.95"))
+    assert tele["telemetry_overhead_ratio"] >= min_ratio, tele
+
     payload = {"rows": rows,
+               "telemetry_overhead": tele,
                "backend": jax.default_backend(),
                "device_count": jax.device_count()}
     path = save("BENCH_perf", payload)

@@ -38,7 +38,7 @@ def accuracy(params, x, y):
     return float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(y)))
 
 
-def run(args, latency_seed: int):
+def run(args, latency_seed: int, telemetry=None):
     bundle = cnn_bundle(CIFAR10)
     x, y = synthetic_classification(args.clients * 300, CIFAR10.in_shape, 10,
                                     signal=12.0, seed=1)
@@ -57,7 +57,7 @@ def run(args, latency_seed: int):
                               args.max_retries)
     trainer = AsyncTrainer(bundle, fsl, latency=latency, network=network,
                            scheduler=scheduler, faults=faults,
-                           seed=latency_seed)
+                           seed=latency_seed, telemetry=telemetry)
     state = trainer.init(args.seed)
     batcher = FederatedBatcher(fed, 20, args.h, seed=1)
     state, history = trainer.run(state, batcher, args.rounds,
@@ -110,9 +110,18 @@ def main():
     ap.add_argument("--crash-rate", type=float, default=None)
     ap.add_argument("--max-retries", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="write the telemetry round-record JSONL to PATH")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write the simulated timeline as Chrome "
+                         "trace-event JSON (open in Perfetto)")
     args = ap.parse_args()
 
-    acc1, hist, trainer = run(args, latency_seed=1)
+    tele = None
+    if args.telemetry or args.trace:
+        from repro.telemetry import Telemetry
+        tele = Telemetry()
+    acc1, hist, trainer = run(args, latency_seed=1, telemetry=tele)
     stats = trainer.stats
     for row in hist:
         keys = [k for k in row if k not in ("round", "aggregated")]
@@ -144,6 +153,15 @@ def main():
               f"{fa['crash_drops']} crashes, {fa['wire_drops']} wire drops, "
               f"{fa['outages']} outages survived; "
               f"{fa['empty_windows']}/{fa['windows']} windows empty")
+    if tele is not None:
+        if args.telemetry:
+            tele.export_jsonl(args.telemetry)
+            print(f"telemetry: {len(tele.records)} records -> "
+                  f"{args.telemetry}")
+        if args.trace:
+            tele.export_trace(args.trace)
+            print(f"telemetry: {len(tele.spans)} simulated-timeline spans "
+                  f"-> {args.trace} (open in Perfetto)")
     assert np.isfinite(acc1) and np.isfinite(acc2)
     if args.rounds >= 10:        # short smoke runs are too noisy to compare
         assert abs(acc1 - acc2) < 0.08, (acc1, acc2)

@@ -27,7 +27,8 @@ from repro.analysis.ast_lint import lint_paths, lint_source
 from repro.analysis.contracts import (audit_chunk, audit_faults,
                                       audit_framed_wire, audit_kernels,
                                       audit_population_chunk, audit_prng,
-                                      audit_registry, audit_wire_contracts,
+                                      audit_registry, audit_telemetry,
+                                      audit_wire_contracts,
                                       chunk_matrix,
                                       population_chunk_specs, run_layer1,
                                       trainer_chunk_fingerprint)
@@ -41,7 +42,8 @@ __all__ = [
     "RULES", "Violation", "apply_waivers", "assert_x64_disabled",
     "audit_chunk", "audit_faults", "audit_framed_wire", "audit_kernels",
     "audit_population_chunk",
-    "audit_prng", "audit_registry", "audit_wire_contracts",
+    "audit_prng", "audit_registry", "audit_telemetry",
+    "audit_wire_contracts",
     "chunk_matrix", "donation_report", "find_callbacks",
     "find_wide_dtypes", "fingerprint", "iter_eqns", "lint_paths",
     "lint_source", "population_chunk_specs", "run_layer1", "spec_tree",

@@ -10,7 +10,12 @@ Pure-syntax rules that need no tracing at all:
         calls into ``jnp`` / ``lax`` inside method or kernel code — a
         branch on a traced value either crashes under jit
         (ConcretizationTypeError) or, worse, silently bakes one branch
-        into the compiled chunk.  Use ``lax.cond`` / ``jnp.where``.
+        into the compiled chunk.  Use ``lax.cond`` / ``jnp.where``;
+  T001  (AST half) no ``repro.telemetry`` imports and no ``.telemetry``
+        attribute access inside method or kernel code — traced code must
+        be recorder-blind; emission lives in the engines, host-side,
+        after the existing fetches (the jaxpr half proves the resulting
+        program identical either way).
 
 Waive a single finding with an inline ``# analysis: waive=A002`` comment
 on the offending line (the waiver marker must name the rule).
@@ -25,6 +30,10 @@ from typing import Iterable, List, Optional, Sequence
 from repro.analysis.rules import Violation
 
 RETIRED_MODULES = ("repro.core.protocol", "repro.core.baselines")
+
+# T001 scope: the telemetry package may only be touched by host-side
+# engine/driver code, never by anything that traces into the chunk.
+TELEMETRY_MODULE = "repro.telemetry"
 
 # A002 scope: files whose code runs under jit (methods + kernels).  The
 # trainers/benchmarks legitimately branch host-side on fetched values.
@@ -102,6 +111,11 @@ def lint_source(source: str, filename: str,
             return
         out.append(Violation(rule, msg, file=filename, line=line))
 
+    def _is_telemetry(module: Optional[str]) -> bool:
+        return module is not None and (
+            module == TELEMETRY_MODULE
+            or module.startswith(TELEMETRY_MODULE + "."))
+
     for node in ast.walk(tree):
         if isinstance(node, ast.Import):
             for alias in node.names:
@@ -109,12 +123,22 @@ def lint_source(source: str, filename: str,
                     emit("A001", f"import of retired shim "
                          f"{alias.name!r} — use repro.core.methods / "
                          "repro.core.trainer", node.lineno)
+                if traced_scope and _is_telemetry(alias.name):
+                    emit("T001", f"import of {alias.name!r} in traced "
+                         "method/kernel code — telemetry is host-side "
+                         "engine machinery, traced code must be "
+                         "recorder-blind", node.lineno)
         elif isinstance(node, ast.ImportFrom):
             mod = node.module
             if _is_retired(mod):
                 emit("A001", f"import from retired shim {mod!r} — use "
                      "repro.core.methods / repro.core.trainer",
                      node.lineno)
+            elif traced_scope and _is_telemetry(mod):
+                emit("T001", f"import from {mod!r} in traced "
+                     "method/kernel code — telemetry is host-side "
+                     "engine machinery, traced code must be "
+                     "recorder-blind", node.lineno)
             elif mod == "repro.core":
                 for alias in node.names:
                     if alias.name in ("protocol", "baselines"):
@@ -131,6 +155,16 @@ def lint_source(source: str, filename: str,
                         _is_retired(str(arg.value)):
                     emit("A001", f"dynamic import of retired shim "
                          f"{arg.value!r}", node.lineno)
+                if traced_scope and isinstance(arg, ast.Constant) and \
+                        _is_telemetry(str(arg.value)):
+                    emit("T001", f"dynamic import of {arg.value!r} in "
+                         "traced method/kernel code", node.lineno)
+        if traced_scope and isinstance(node, ast.Attribute) and \
+                node.attr == "telemetry":
+            emit("T001", "'.telemetry' attribute access in traced "
+                 "method/kernel code — the recorder never crosses into "
+                 "the scan body; emit from the engine after the fetch",
+                 node.lineno)
         if traced_scope and isinstance(node, (ast.If, ast.While, ast.IfExp)):
             hit = _test_is_traced(node.test)
             if hit is not None:

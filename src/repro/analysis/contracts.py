@@ -23,6 +23,9 @@ repo's load-bearing invariants (see :data:`repro.analysis.rules.RULES`):
   R001       the chunk jaxpr's structural fingerprint is identical across
              two independent constructions (recompilation guard — also
              wired into ``benchmarks/perf_bench.py``);
+  T001       telemetry neutrality — the donated chunk traces to the same
+             program with the recorder enabled vs disabled, and carries
+             no host callbacks (observation can never change what runs);
   A003       registry completeness (hooks, agg_keys, wire_channels,
              decomposition consistency).
 
@@ -406,6 +409,73 @@ def audit_population_chunk(method_name: str, codec: str = "none",
     return out, fp1
 
 
+# ---------------------------------------------------------------------------
+# T001: telemetry neutrality (observation may never change the program)
+# ---------------------------------------------------------------------------
+
+
+def audit_telemetry(bundle=None, telemetry_chunk=None,
+                    methods: Sequence[str] = ("cse_fsl", "fsl_mc")
+                    ) -> List[Violation]:
+    """T001: the recorder is observation-only.  Builds the production
+    :class:`~repro.core.trainer.Trainer` twice over the harness — once
+    with a live ``repro.telemetry.Telemetry``, once with the default
+    no-op recorder — and demands, per method, that
+
+      (a) the donated chunk program (``chunk_fn``) and its device-pool
+          twin (``pool_chunk_fn``) trace to *structurally identical*
+          jaxprs in both builds (a telemetry-dependent trace means
+          flipping observability on retraces, recompiles, and can perturb
+          the trained numerics), and
+      (b) the telemetry-enabled chunk contains no host callback
+          primitives — the only mechanism by which an in-scan emit could
+          ever reach the host-side recorder.
+
+    ``telemetry_chunk`` substitutes the telemetry-enabled chunk program
+    (seeded-violation tests inject a callback-carrying or structurally
+    divergent chunk here); when given, only the first method is audited.
+    """
+    from repro.core.methods import get_method
+    from repro.core.trainer import Trainer
+    from repro.telemetry import Telemetry
+    bundle = bundle or harness_bundle()
+    out: List[Violation] = []
+    if telemetry_chunk is not None:
+        methods = methods[:1]
+    for nm in methods:
+        method = get_method(nm)
+        fsl = harness_fsl(nm)
+        t_on = Trainer(bundle, fsl, telemetry=Telemetry())
+        t_off = Trainer(bundle, fsl)
+        for prog, attr in (("chunk", "chunk_fn"), ("pool", "pool_chunk_fn")):
+            combo = f"program=telemetry:{prog} method={nm}"
+            if prog == "chunk":
+                specs = _chunk_specs(method, bundle, fsl, masked=False)
+            else:
+                specs = population_chunk_specs(method, bundle, fsl,
+                                               masked=False)
+            chunk_on = getattr(t_on, attr)
+            if telemetry_chunk is not None and prog == "chunk":
+                chunk_on = telemetry_chunk
+            jaxpr_on = jax.make_jaxpr(chunk_on)(*specs)
+            cbs = find_callbacks(jaxpr_on)
+            if cbs:
+                out.append(Violation(
+                    "T001", f"host callback primitive(s) "
+                    f"{sorted(set(cbs))} inside the donated chunk with "
+                    "telemetry enabled — the recorder must never reach "
+                    "into the scan body", combo=combo))
+            fp_on = _fingerprint_jaxpr(jaxpr_on)
+            fp_off = _fingerprint_jaxpr(
+                jax.make_jaxpr(getattr(t_off, attr))(*specs))
+            if fp_on != fp_off:
+                out.append(Violation(
+                    "T001", "chunk jaxpr differs with telemetry enabled "
+                    f"({fp_on[:12]} != {fp_off[:12]}) — observation "
+                    "changed the compiled program", combo=combo))
+    return out
+
+
 def trainer_chunk_fingerprint(trainer, batch, chunk: int) -> str:
     """Structural fingerprint of a live Trainer's compiled chunk program
     over a concrete sample ``batch`` — the recompilation guard
@@ -678,6 +748,9 @@ def run_layer1(full: bool = False, progress=None):
     violations.extend(audit_prng())
     violations.extend(audit_faults())
     violations.extend(audit_registry(bundle=bundle))
+    if progress:
+        progress("telemetry neutrality: cse_fsl / fsl_mc")
+    violations.extend(audit_telemetry(bundle=bundle))
     if progress:
         progress("kernel hygiene: fused_ce / ssm_scan / swa_attention")
     violations.extend(audit_kernels())

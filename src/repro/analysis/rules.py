@@ -44,6 +44,12 @@ RULES = {
             "stochastic codec's rounding draws",
     "R001": "the chunk jaxpr's structural fingerprint must be identical "
             "across independent constructions (recompilation guard)",
+    "T001": "telemetry is observation-only: the donated chunk program must "
+            "be structurally identical with the recorder enabled vs "
+            "disabled and contain no host callbacks — enabling "
+            "observability may never retrace, recompile, or perturb the "
+            "trained numerics (also an AST rule: no repro.telemetry "
+            "imports or .telemetry access in methods/kernels)",
     # -- Layer 2: AST / registry lint --------------------------------------
     "A001": "no imports of the retired repro.core.protocol / "
             "repro.core.baselines shims",

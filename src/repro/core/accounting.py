@@ -77,11 +77,47 @@ def total_storage(cm: CostModel, method: str) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Flat records — the ONE summary shape every stats object exports
+# ---------------------------------------------------------------------------
+
+
+def flat_record(d: Dict, prefix: str = "") -> Dict:
+    """Flatten a (possibly nested) summary dict into dotted keys with a
+    DETERMINISTIC key order: keys sorted at every nesting level, nested
+    dicts expanded as ``prefix.child``.  This is the single merge rule
+    behind ``to_record`` on `CommMeter` / `AsyncStats` / `FaultStats`,
+    the launcher's ``--out`` JSON, and the telemetry summary records —
+    replacing the ad-hoc per-driver key merging the five ``as_dict``
+    shapes used to get."""
+    out: Dict = {}
+    for k in sorted(d, key=str):
+        v = d[k]
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(flat_record(v, f"{key}."))
+        else:
+            out[key] = v
+    return out
+
+
+class Recordable:
+    """Mixin giving any stats object (anything with ``as_dict``) a
+    deterministic flat-record export (see :func:`flat_record`)."""
+
+    def as_dict(self) -> Dict:  # pragma: no cover - subclasses override
+        raise NotImplementedError
+
+    def to_record(self, prefix: str = "") -> Dict:
+        """``as_dict`` flattened to sorted dotted keys under ``prefix``."""
+        return flat_record(self.as_dict(), prefix)
+
+
+# ---------------------------------------------------------------------------
 # Runtime meter
 # ---------------------------------------------------------------------------
 
 
-class CommMeter:
+class CommMeter(Recordable):
     """Incremental byte counters driven by the trainer loop."""
 
     def __init__(self):

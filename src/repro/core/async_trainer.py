@@ -54,7 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FSLConfig
-from repro.core.accounting import CommMeter, CostModel
+from repro.core.accounting import CommMeter, CostModel, Recordable
 from repro.core.bundle import SplitModelBundle
 from repro.core.methods import CommProfile, FSLMethod, get_method
 from repro.core.trainer import AggregationCadence
@@ -202,7 +202,7 @@ def make_latency(name: str, **kw) -> LatencyModel:
 
 
 @dataclasses.dataclass
-class AsyncStats:
+class AsyncStats(Recordable):
     """Straggler / idle-time accounting for one ``AsyncTrainer.run``."""
     rounds: int = 0
     events: int = 0                 # server-consumed (admitted) uploads
@@ -211,6 +211,7 @@ class AsyncStats:
     server_busy: float = 0.0        # shared-server service time
     client_wait: float = 0.0        # blocking methods: time spent waiting
     comm_time: float = 0.0          # network transfer seconds (all events)
+    compute_time: float = 0.0       # client compute seconds (all launches)
     model_sync_time: float = 0.0    # aggregation model up/download seconds
     # scheduling (all zero / empty under the default wait_all barrier):
     dropped: int = 0                # uploads past the deadline, not consumed
@@ -236,6 +237,7 @@ class AsyncStats:
                 "server_idle": self.server_idle,
                 "client_wait": self.client_wait,
                 "comm_time": self.comm_time,
+                "compute_time": self.compute_time,
                 "model_sync_time": self.model_sync_time,
                 "dropped": self.dropped, "skipped": self.skipped,
                 "min_participants": min(self.agg_participants)
@@ -301,10 +303,20 @@ class AsyncTrainer:
     # CommMeter), crashed clients sit the round out, server outages delay
     # the round's service start.
     faults: Optional[Any] = None
+    # observability: None resolves to the shared no-op NullTelemetry; a
+    # repro.telemetry.Telemetry records per-round records plus the
+    # SIMULATED timeline — per-client compute / wire-transfer /
+    # retry-backoff / outage spans on the event clock, renderable as a
+    # Perfetto-openable Chrome trace.  Observation-only (rule T001):
+    # emission is host bookkeeping on already-computed floats; the event
+    # schedule, params, and history are bitwise-identical with telemetry
+    # on vs off.
+    telemetry: Optional[Any] = None
 
     def __post_init__(self):
         from repro.faults import resolve_fault
         from repro.sched import resolve_policy
+        from repro.telemetry import resolve_telemetry
         from repro.transport import resolve_transport
         m = self.method if self.method is not None else self.fsl.method
         if isinstance(m, str):
@@ -325,6 +337,7 @@ class AsyncTrainer:
             m.make_wire_aggregate(self.fsl, transport=self.transport))
         self.scheduler = resolve_policy(self.scheduler)
         self.faults = resolve_fault(self.faults)
+        self.telemetry = resolve_telemetry(self.telemetry)
         if not self.scheduler.is_wait_all or not self.faults.is_null:
             self._magg_fn = jax.jit(m.make_wire_aggregate(
                 self.fsl, transport=self.transport, participation=True,
@@ -626,6 +639,10 @@ class AsyncTrainer:
                             ms_up / net_trace.up_bps[r, :, -1]
                             + ms_down / net_trace.down_bps[r, :, -1]
                             + 2.0 * net_trace.rtt[r, :, -1]))
+                    if self.telemetry.enabled and secs:
+                        self.telemetry.sim_span(
+                            "model_sync", self.stats.async_time, secs,
+                            track="server", round=rnd0 + r + 1)
                     self.stats.async_time += secs
                     self.stats.sync_time += secs
                     self.stats.model_sync_time += secs
@@ -639,6 +656,22 @@ class AsyncTrainer:
                         meter.log("model_sync", profile.wire_model_sync)
                 if use_masks:
                     part[:] = True
+            if self.telemetry.enabled:
+                rex: dict = {}
+                if use_masks:
+                    rex["participants"] = row_part
+                if sched_active:
+                    rex["dropped_updates"] = self.stats.dropped
+                    rex["skipped_updates"] = self.stats.skipped
+                if fault_active:
+                    rex["fault_retries"] = fstats.retries
+                    rex["fault_drops"] = (fstats.crash_drops
+                                          + fstats.wire_drops)
+                self.telemetry.round_record(
+                    "async", rnd0 + r + 1,
+                    {k: float(v) for k, v in metrics.items()}, aggregated,
+                    comm_bytes=meter.total if meter is not None else None,
+                    sim_time=self.stats.async_time, extra=rex or None)
             if log_every and (r + 1) % log_every == 0:
                 m = {k: float(v) for k, v in metrics.items()}
                 row: dict = {"round": rnd0 + r + 1, **m,
@@ -662,6 +695,10 @@ class AsyncTrainer:
         if fault_active:
             # scheduler-induced drops, for contrast with crash/wire drops
             fstats.deadline_drops = self.stats.dropped
+        if self.telemetry.enabled:
+            self.telemetry.run_summary(
+                "async", comm=meter, stats=self.stats,
+                participation=self.participation_summary())
         return self._join(state, slices, shared, round_val), history
 
     def _run_round(self, slices: List[Dict[str, Any]], shared, batch,
@@ -711,6 +748,35 @@ class AsyncTrainer:
         if fault is not None:
             f_att, f_ok, fd_att, fd_ok, crash = fault
             fmodel = self.faults
+        # telemetry: spans are placed on the GLOBAL simulated clock by
+        # offsetting this round's local event times with the wall clock
+        # accumulated so far — pure host bookkeeping on floats the engine
+        # already computed, never touching the event schedule (rule T001)
+        tele = self.telemetry
+        emit = tele.enabled
+        t_base = st.async_time
+        if emit and server_start > 0.0:
+            tele.sim_span("outage", t_base, server_start, track="server")
+
+        def wire_spans(name: str, c: int, k: int, t0: float, per: float,
+                       att: int, ok: bool, channel: str):
+            """One span per transmission attempt, interleaved with its
+            retry-backoff waits — durations sum to ``att * per +
+            backoff_seconds(att)``, the exact transfer time billed into
+            the arrival/reply instants."""
+            cur = t_base + t0
+            waits = fmodel.backoff_schedule(att) if fault is not None else ()
+            for a in range(att):
+                tele.sim_span(name, cur, per, track=f"client/{c}",
+                              unit=unit0 + k, attempt=a + 1,
+                              channel=channel,
+                              delivered=ok and a == att - 1)
+                cur += per
+                if a < len(waits):
+                    tele.sim_span("retry_backoff", cur, waits[a],
+                                  track=f"client/{c}", unit=unit0 + k,
+                                  channel=channel)
+                    cur += waits[a]
 
         def _codec_key(k: int, c: int, channel: str):
             from repro.transport import CHANNEL_SALTS
@@ -739,7 +805,12 @@ class AsyncTrainer:
                 upload = self._code_up(upload, _codec_key(k, c, "uplink"))
             slices[c] = cslice
             tally(m)
+            if emit:
+                tele.sim_span("compute", t_base + client_t[c],
+                              float(comp[c, k]), track=f"client/{c}",
+                              unit=unit0 + k)
             client_t[c] += float(comp[c, k])
+            st.compute_time += float(comp[c, k])
             next_k[c] = k + 1
             att, ok, backoff = 1, True, 0.0
             if fault is not None:
@@ -749,6 +820,10 @@ class AsyncTrainer:
                     self._verify_frame(upload, unit0 + k, c)
             st.comm_time += att * float(xu[c, k])
             xfer = att * (float(up[c, k]) + float(xu[c, k])) + backoff
+            if emit:
+                wire_spans("wire/up", c, k, client_t[c],
+                           float(up[c, k]) + float(xu[c, k]), att, ok,
+                           "uplink")
             if not ok:
                 # retry budget exhausted: the bytes burned on the wire,
                 # the payload never arrived — this client's round is lost
@@ -772,7 +847,13 @@ class AsyncTrainer:
                             slices[c], _unit_batch(batch, c, k, hooks), lr)
                         slices[c] = cslice
                         tally(m)
+                        if emit:
+                            tele.sim_span("compute", t_base + client_t[c],
+                                          float(comp[c, k]),
+                                          track=f"client/{c}",
+                                          unit=unit0 + k, local=True)
                         client_t[c] += float(comp[c, k])
+                        st.compute_time += float(comp[c, k])
                 else:
                     active[c] = False   # idle: contributes no round time
                 continue
@@ -817,6 +898,11 @@ class AsyncTrainer:
             tally(m)
             st.events += 1
             st.server_busy += self.server_time
+            if emit:
+                tele.sim_span("serve", t_base + t_done - self.server_time,
+                              self.server_time,
+                              track="server" if hooks.server_shared
+                              else f"server/{c}", client=c, unit=unit0 + k)
             if hooks.server_shared:
                 shared, server_free = sstate, t_done
             else:
@@ -831,6 +917,10 @@ class AsyncTrainer:
                 st.comm_time += d_att * float(xd[c, k])
                 t_reply = t_done + d_att * (float(down[c, k])
                                             + float(xd[c, k])) + d_backoff
+                if emit:
+                    wire_spans("wire/down", c, k, t_done,
+                               float(down[c, k]) + float(xd[c, k]), d_att,
+                               d_ok, "downlink")
                 if not d_ok:
                     # the gradient reply never survived its retry budget:
                     # the client cannot continue its blocked chain — the

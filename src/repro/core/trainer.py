@@ -100,10 +100,17 @@ class Trainer:
     # that masks crashed/undelivered clients out of FedAvg and bills every
     # retransmission exactly.
     faults: Optional[Any] = None
+    # observability: None resolves to the shared no-op NullTelemetry; a
+    # repro.telemetry.Telemetry records per-round records, counters, and
+    # host spans.  Observation-only by contract (rule T001): recording
+    # happens on the host AFTER the existing post-step/post-chunk fetch —
+    # params and history are bitwise-identical with telemetry on vs off.
+    telemetry: Optional[Any] = None
 
     def __post_init__(self):
         from repro.faults import resolve_fault
         from repro.sched import resolve_policy
+        from repro.telemetry import resolve_telemetry
         from repro.transport import resolve_transport
         m = self.method if self.method is not None else self.fsl.method
         if isinstance(m, str):
@@ -112,6 +119,7 @@ class Trainer:
         self.transport = resolve_transport(self.transport, self.fsl)
         self.scheduler = resolve_policy(self.scheduler)
         self.faults = resolve_fault(self.faults)
+        self.telemetry = resolve_telemetry(self.telemetry)
         if self.network is None:
             from repro.network import IdealNetwork
             self.network = IdealNetwork()
@@ -367,7 +375,7 @@ class Trainer:
     # rides on this being one code path) -----------------------------------
     def _log_round(self, rnd, rnd0, aggregated, metrics_fn, profile, meter,
                    log_every, callback, history, state, extra=None,
-                   model_sync_bytes=None, wire_bytes=None):
+                   model_sync_bytes=None, wire_bytes=None, engine="loop"):
         """Meter + history row for one finished (post-aggregation) round.
         ``metrics_fn`` lazily yields the float-cast metrics dict so the
         per-round loop only fetches device scalars on logged rounds.
@@ -376,7 +384,12 @@ class Trainer:
         value — the wait_all path, byte for byte the legacy meter).
         Fault runs pass ``wire_bytes`` — the trace-exact per-kind byte
         dict (retransmissions and checksum frames included) that replaces
-        the static per-round profile charges."""
+        the static per-round profile charges.
+
+        An enabled telemetry recorder additionally folds EVERY round into
+        its record stream under ``engine`` — pure host bookkeeping on the
+        values this method already handles, after any device fetch, so
+        history/meter/params stay bitwise-identical (rule T001)."""
         if profile is not None:
             if wire_bytes is None:
                 meter.log("uplink_smashed", profile.wire_uplink_smashed)
@@ -388,8 +401,14 @@ class Trainer:
             if aggregated:
                 meter.log("model_sync", profile.wire_model_sync
                           if model_sync_bytes is None else model_sync_bytes)
-        if log_every and (rnd + 1 - rnd0) % log_every == 0:
-            m = metrics_fn()
+        tele = self.telemetry
+        logged = log_every and (rnd + 1 - rnd0) % log_every == 0
+        m = metrics_fn() if (logged or tele.enabled) else None
+        if tele.enabled:
+            tele.round_record(engine, rnd + 1, m, aggregated,
+                              comm_bytes=meter.total if meter is not None
+                              else None, extra=extra)
+        if logged:
             row: dict = {"round": rnd + 1, **m, "aggregated": aggregated}
             if extra:
                 row.update(extra)
@@ -508,6 +527,9 @@ class Trainer:
                             profile, meter, log_every, callback, history,
                             state, extra=extra, model_sync_bytes=ms_bytes,
                             wire_bytes=wire)
+        if self.telemetry.enabled:
+            self.telemetry.run_summary("loop", comm=meter,
+                                       participation=self.participation_summary())
         return state, history
 
     # -- the compiled loop --------------------------------------------------
@@ -591,48 +613,63 @@ class Trainer:
         pooled = (device_data and hasattr(batcher, "device_pool")
                   and hasattr(batcher, "next_round_indices"))
         pool = batcher.device_pool() if pooled else None
+        tele = self.telemetry
+        chunk_idx = 0
+        seen_r = set()          # chunk lengths already compiled this call
         while done < num_rounds:
             r = min(chunk, num_rounds - done)
-            if pooled:
-                idx = np.stack([batcher.next_round_indices()
-                                for _ in range(r)])          # [R, n, h, B]
-                sample = self.pool_round_spec(pool, idx.shape[1:])
-            else:
-                rounds = [batcher.next_round() for _ in range(r)]
-                sample = rounds[0]
-            if meter is not None and cost_model is not None \
-                    and profile is None:
-                batch_size = jax.tree_util.tree_leaves(
-                    sample[1])[0].shape[2]
-                profile = self.comm_profile(cost_model, batch_size,
-                                            batch=sample)
-            if use_masks and masks is None:
-                masks = self._effective_masks(sample, horizon, ftrace)
-            lrs = jnp.asarray([self.lr_at(rnd0 + done + i) for i in range(r)],
-                              jnp.float32)
-            if use_masks:
-                if part_dev is None:
-                    part_dev = jnp.ones(n, jnp.float32)
-                mk = jnp.asarray(masks[rnd0 + done:rnd0 + done + r],
-                                 jnp.float32)
+            # host spans ("chunk/build" staging vs "chunk/execute" dispatch
+            # + fetch) are observation-only wall-clock brackets; the first
+            # dispatch of each chunk length includes XLA compilation
+            # (labelled first_dispatch — use --profile-dir for the real
+            # jax.profiler compile/execute breakdown)
+            with tele.timed("chunk/build", chunk=chunk_idx, rounds=r):
                 if pooled:
-                    state, metrics, agg_mask, part_dev = \
-                        self.masked_pool_chunk_fn(state, pool,
-                                                  jnp.asarray(idx), lrs,
-                                                  mk, part_dev)
+                    idx = np.stack([batcher.next_round_indices()
+                                    for _ in range(r)])      # [R, n, h, B]
+                    sample = self.pool_round_spec(pool, idx.shape[1:])
+                    batches = None
                 else:
+                    rounds = [batcher.next_round() for _ in range(r)]
+                    sample = rounds[0]
                     batches = jax.tree_util.tree_map(_stack_rounds, *rounds)
-                    state, metrics, agg_mask, part_dev = self.masked_chunk_fn(
-                        state, batches, lrs, mk, part_dev)
-            elif pooled:
-                state, metrics, agg_mask = self.pool_chunk_fn(
-                    state, pool, jnp.asarray(idx), lrs)
-            else:
-                batches = jax.tree_util.tree_map(_stack_rounds, *rounds)
-                state, metrics, agg_mask = self.chunk_fn(state, batches, lrs)
-            # ONE host fetch per chunk: the stacked metrics + agg mask
-            agg_mask = np.asarray(agg_mask)
-            metrics = {k: np.asarray(v) for k, v in metrics.items()}
+                if meter is not None and cost_model is not None \
+                        and profile is None:
+                    batch_size = jax.tree_util.tree_leaves(
+                        sample[1])[0].shape[2]
+                    profile = self.comm_profile(cost_model, batch_size,
+                                                batch=sample)
+                if use_masks and masks is None:
+                    masks = self._effective_masks(sample, horizon, ftrace)
+                lrs = jnp.asarray([self.lr_at(rnd0 + done + i)
+                                   for i in range(r)], jnp.float32)
+            with tele.timed("chunk/execute", chunk=chunk_idx, rounds=r,
+                            first_dispatch=r not in seen_r):
+                if use_masks:
+                    if part_dev is None:
+                        part_dev = jnp.ones(n, jnp.float32)
+                    mk = jnp.asarray(masks[rnd0 + done:rnd0 + done + r],
+                                     jnp.float32)
+                    if pooled:
+                        state, metrics, agg_mask, part_dev = \
+                            self.masked_pool_chunk_fn(state, pool,
+                                                      jnp.asarray(idx), lrs,
+                                                      mk, part_dev)
+                    else:
+                        state, metrics, agg_mask, part_dev = \
+                            self.masked_chunk_fn(state, batches, lrs, mk,
+                                                 part_dev)
+                elif pooled:
+                    state, metrics, agg_mask = self.pool_chunk_fn(
+                        state, pool, jnp.asarray(idx), lrs)
+                else:
+                    state, metrics, agg_mask = self.chunk_fn(state, batches,
+                                                             lrs)
+                # ONE host fetch per chunk: the stacked metrics + agg mask
+                agg_mask = np.asarray(agg_mask)
+                metrics = {k: np.asarray(v) for k, v in metrics.items()}
+            seen_r.add(r)
+            chunk_idx += 1
             for i in range(r):
                 rnd = rnd0 + done + i
                 aggregated = bool(agg_mask[i])
@@ -683,6 +720,10 @@ class Trainer:
                     rnd, rnd0, aggregated,
                     lambda: {k: float(v[i]) for k, v in metrics.items()},
                     profile, meter, log_every, callback, history, state,
-                    extra=extra, model_sync_bytes=ms_bytes, wire_bytes=wire)
+                    extra=extra, model_sync_bytes=ms_bytes, wire_bytes=wire,
+                    engine="compiled")
             done += r
+        if tele.enabled:
+            tele.run_summary("compiled", comm=meter,
+                             participation=self.participation_summary())
         return state, history

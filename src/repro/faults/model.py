@@ -49,6 +49,8 @@ from typing import Dict, Optional, Union
 
 import numpy as np
 
+from repro.core.accounting import Recordable
+
 # Host-RNG stream id for fault traces — distinct from the async engine's
 # network-trace stream (0x6E6574 "net") so one seed feeds latency, link
 # weather, and faults without coupling the draws.
@@ -228,12 +230,20 @@ class FaultModel:
                                             self.backoff_cap)
                          for i in range(self.max_retries)))
 
+    def backoff_schedule(self, attempts: int) -> tuple:
+        """The individual waits behind :meth:`backoff_seconds` —
+        ``attempts - 1`` values, exponentially grown from
+        ``backoff_base`` and capped per-wait at ``backoff_cap``.  The
+        telemetry layer places one ``retry_backoff`` span per wait
+        between the retransmission attempts, so the rendered timeline
+        sums to the billed backoff exactly."""
+        return tuple(min(self.backoff_base * 2 ** i, self.backoff_cap)
+                     for i in range(max(int(attempts) - 1, 0)))
+
     def backoff_seconds(self, attempts: int) -> float:
         """Backoff seconds a sender waited across ``attempts``
-        transmissions (``attempts - 1`` waits, exponentially grown from
-        ``backoff_base``, each capped at ``backoff_cap``)."""
-        return float(sum(min(self.backoff_base * 2 ** i, self.backoff_cap)
-                         for i in range(max(int(attempts) - 1, 0))))
+        transmissions (the sum of :meth:`backoff_schedule`)."""
+        return float(sum(self.backoff_schedule(attempts)))
 
     def __repr__(self):
         return f"<FaultModel {self.name}>"
@@ -336,7 +346,7 @@ def resolve_fault(faults) -> FaultModel:
 
 
 @dataclasses.dataclass
-class FaultStats:
+class FaultStats(Recordable):
     """What the faults actually did, counted exactly from the realized
     trace: retransmissions, the extra bytes they burned, who crashed how,
     and what the server survived.  Appears in history rows and

@@ -190,6 +190,20 @@ def main():
                          "(run_compiled); 0 = per-round Python loop")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="write the unified round-record stream "
+                         "(repro.telemetry JSONL, one validated record per "
+                         "line) to PATH")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON timeline to PATH "
+                         "(open in Perfetto / chrome://tracing)")
+    ap.add_argument("--prom", default=None, metavar="PATH",
+                    help="write Prometheus text exposition of telemetry "
+                         "counters/gauges to PATH")
+    ap.add_argument("--profile-dir", default=None, metavar="PATH",
+                    help="bracket training with jax.profiler.start_trace/"
+                         "stop_trace writing a TensorBoard/Perfetto XLA "
+                         "profile under PATH")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -235,6 +249,12 @@ def main():
     network = network_from_flags(args.network, args.bandwidth_mbps)
     faults = fault_from_flags(args.faults, args.loss_rate, args.crash_rate,
                               args.max_retries)
+    # observation-only recorder (analysis rule T001): enabling it never
+    # changes the compiled programs or the params/history bitwise
+    tele = None
+    if args.telemetry or args.trace or args.prom:
+        from repro.telemetry import Telemetry
+        tele = Telemetry()
     pop = None
     if args.population:
         mesh = None
@@ -242,14 +262,17 @@ def main():
             mesh = make_host_mesh(model=1, data=jax.device_count())
         pop = Population(bundle, fsl, population=args.population,
                          data=pool_data, sampler=args.sampler,
-                         network=network, mesh=mesh, faults=faults)
+                         network=network, mesh=mesh, faults=faults,
+                         telemetry=tele)
         trainer = pop.trainer
         pop.init()
     else:
         scheduler = scheduler_from_flags(args.scheduler, args.deadline_s)
         trainer = Trainer(bundle, fsl, scheduler=scheduler, network=network,
-                          faults=faults)
+                          faults=faults, telemetry=tele)
         state = trainer.init()
+    if args.profile_dir:
+        jax.profiler.start_trace(args.profile_dir)
     t0 = time.time()
 
     def cb(rnd, metrics, _state):
@@ -274,6 +297,9 @@ def main():
                                      log_every=args.log_every, callback=cb,
                                      meter=meter, cost_model=cm)
     dt = time.time() - t0
+    if args.profile_dir:
+        jax.profiler.stop_trace()
+        print(f"XLA profile written under {args.profile_dir}")
     print(f"\n{args.rounds} rounds in {dt:.1f}s; "
           f"total comm = {meter.total/2**20:.1f} MiB "
           f"({json.dumps({k: round(v/2**20, 2) for k, v in meter.counts.items()})} MiB)")
@@ -330,13 +356,38 @@ def main():
               + (f" ({fault_summary['empty_windows']} empty)"
                  if fault_summary["empty_windows"] else ""))
     if args.out:
+        # flat deterministic-key-order record (Recordable.to_record): the
+        # same flattening the telemetry run summary uses, so downstream
+        # consumers parse one shape regardless of which engine ran
+        from repro.core.accounting import flat_record
+        record = meter.to_record("comm.")
+        for prefix, section in (("wallclock.", wallclock),
+                                ("participation.", participation),
+                                ("population.", pop_summary),
+                                ("memory.", pop_memory)):
+            if section:
+                record.update(flat_record(section, prefix))
         with open(args.out, "w") as f:
             json.dump({"args": vars(args), "history": history,
                        "comm": meter.as_dict(), "wallclock": wallclock,
                        "participation": participation,
                        "faults": fault_summary,
                        "population": pop_summary,
-                       "memory": pop_memory}, f, indent=1)
+                       "memory": pop_memory,
+                       "record": record}, f, indent=1)
+    if tele is not None:
+        if args.telemetry:
+            tele.export_jsonl(args.telemetry)
+            print(f"telemetry: {len(tele.records)} records -> "
+                  f"{args.telemetry}")
+        if args.trace:
+            tele.export_trace(args.trace)
+            print(f"telemetry: {len(tele.spans)} spans -> {args.trace} "
+                  f"(open in Perfetto)")
+        if args.prom:
+            tele.export_prometheus(args.prom)
+            print(f"telemetry: {len(tele.counters) + len(tele.gauges)} "
+                  f"series -> {args.prom}")
 
 
 if __name__ == "__main__":

@@ -83,6 +83,10 @@ class Population:
     # CSE-FSL global-model semantics): a crashed client's lost local
     # update is exactly the refresh overwrite.
     faults: Optional[Any] = None
+    # observability (repro.telemetry): forwarded to the inner Trainer;
+    # the cohort engine emits per-round records under engine="population"
+    # plus chunk build/execute host spans.  Observation-only (rule T001).
+    telemetry: Optional[Any] = None
 
     def __post_init__(self):
         C = self.fsl.num_clients
@@ -90,7 +94,9 @@ class Population:
             raise ValueError(f"population {self.population} < cohort {C}")
         self.trainer = Trainer(self.bundle, self.fsl, donate=self.donate,
                                transport=self.transport,
-                               network=self.network, faults=self.faults)
+                               network=self.network, faults=self.faults,
+                               telemetry=self.telemetry)
+        self.telemetry = self.trainer.telemetry
         self.faults = self.trainer.faults
         if not self.faults.is_null and not self.refresh:
             raise ValueError(
@@ -457,40 +463,44 @@ class Population:
                 while s < seg and self.window_of(r0 + s) == w0:
                     s += 1
                 seg = s
-            plans = []
-            for i in range(seg):
-                w = self.window_of(r0 + i)
-                ids = self.cohort_for(w)
-                plans.append(self.data.round_indices(ids, r0 + i))
-            sample = t.pool_round_spec(pool, plans[0].shape)
-            if self._payload_bytes is None:
-                up_spec, reply_spec = t.method.payload_specs(
-                    self.bundle, self.fsl, sample)
-                self._payload_bytes = (
-                    t.transport.uplink_payload_bytes(up_spec),
-                    t.transport.downlink_payload_bytes(reply_spec)
-                    if reply_spec is not None else 0)
-            for i in range(seg):
-                w = self.window_of(r0 + i)
-                self._record_window(w, self.cohort_for(w), r0 + i)
-            if meter is not None and cost_model is not None \
-                    and profile is None:
-                batch_size = jax.tree_util.tree_leaves(
-                    sample[1])[0].shape[2]
-                profile = t.comm_profile(cost_model, batch_size,
-                                         batch=sample)
-            idx = jnp.asarray(np.stack(plans))
-            lrs = jnp.asarray([t.lr_at(r0 + i) for i in range(seg)],
-                              jnp.float32)
-            if fault_active:
-                mk = jnp.asarray(surv[r0:r0 + seg], jnp.float32)
-                state, metrics, agg_mask, part_dev = t.masked_pool_chunk_fn(
-                    state, pool, idx, lrs, mk, part_dev)
-            else:
-                state, metrics, agg_mask = t.pool_chunk_fn(state, pool, idx,
-                                                           lrs)
-            agg_mask = np.asarray(agg_mask)
-            metrics = {k: np.asarray(v) for k, v in metrics.items()}
+            with self.telemetry.timed("chunk/build", window=w0, rounds=seg):
+                plans = []
+                for i in range(seg):
+                    w = self.window_of(r0 + i)
+                    ids = self.cohort_for(w)
+                    plans.append(self.data.round_indices(ids, r0 + i))
+                sample = t.pool_round_spec(pool, plans[0].shape)
+                if self._payload_bytes is None:
+                    up_spec, reply_spec = t.method.payload_specs(
+                        self.bundle, self.fsl, sample)
+                    self._payload_bytes = (
+                        t.transport.uplink_payload_bytes(up_spec),
+                        t.transport.downlink_payload_bytes(reply_spec)
+                        if reply_spec is not None else 0)
+                for i in range(seg):
+                    w = self.window_of(r0 + i)
+                    self._record_window(w, self.cohort_for(w), r0 + i)
+                if meter is not None and cost_model is not None \
+                        and profile is None:
+                    batch_size = jax.tree_util.tree_leaves(
+                        sample[1])[0].shape[2]
+                    profile = t.comm_profile(cost_model, batch_size,
+                                             batch=sample)
+                idx = jnp.asarray(np.stack(plans))
+                lrs = jnp.asarray([t.lr_at(r0 + i) for i in range(seg)],
+                                  jnp.float32)
+            with self.telemetry.timed("chunk/execute", window=w0,
+                                      rounds=seg):
+                if fault_active:
+                    mk = jnp.asarray(surv[r0:r0 + seg], jnp.float32)
+                    state, metrics, agg_mask, part_dev = \
+                        t.masked_pool_chunk_fn(state, pool, idx, lrs, mk,
+                                               part_dev)
+                else:
+                    state, metrics, agg_mask = t.pool_chunk_fn(state, pool,
+                                                               idx, lrs)
+                agg_mask = np.asarray(agg_mask)
+                metrics = {k: np.asarray(v) for k, v in metrics.items()}
             for i in range(seg):
                 rnd = r0 + i
                 aggregated = bool(agg_mask[i])
@@ -532,7 +542,8 @@ class Population:
                     rnd, rnd0, aggregated,
                     lambda: {k: float(v[i]) for k, v in metrics.items()},
                     profile, meter, log_every, callback, history, state,
-                    extra=extra, model_sync_bytes=ms_bytes, wire_bytes=wire)
+                    extra=extra, model_sync_bytes=ms_bytes, wire_bytes=wire,
+                    engine="population")
             done += seg
         self._state = state
         # a segment can END exactly on a window boundary — enter the new
@@ -542,4 +553,9 @@ class Population:
             if fault_active:
                 self._state = self._close_window(self._state)
             self._advance_window(w_next)
+        if self.telemetry.enabled:
+            self.telemetry.run_summary(
+                "population", comm=meter,
+                population=self.population_summary(history),
+                participation=t.participation_summary())
         return self._state, history

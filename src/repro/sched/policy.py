@@ -129,21 +129,28 @@ class SchedulerPolicy:
         return None
 
     def summary(self, ctx: SchedContext, masks: np.ndarray) -> Dict:
-        """Participation summary of a realized plan (driver-printable)."""
+        """Participation summary of a realized plan (driver-printable).
+        A zero-round plan (resume exactly at the horizon, degenerate
+        sweeps) yields a well-defined all-zero record — no NaN means, no
+        ``min()`` of an empty reduction."""
         n = masks.shape[1]
+        rounds = int(masks.shape[0])
         out: Dict[str, Any] = {
             "policy": self.name,
-            "rounds": int(masks.shape[0]),
-            "mean_cohort": round(float(masks.sum(1).mean()), 3),
-            "min_cohort": int(masks.sum(1).min()),
+            "rounds": rounds,
+            "mean_cohort": round(float(masks.sum(1).mean()), 3)
+            if rounds else 0.0,
+            "min_cohort": int(masks.sum(1).min()) if rounds else 0,
             "participation_rate": [round(float(x), 3)
-                                   for x in masks.mean(0)],
+                                   for x in masks.mean(0)]
+            if rounds else [0.0] * n,
         }
         tiers = client_tiers(ctx.network, n)
         if tiers is not None:
             out["tier_participation"] = {
                 t: round(float(masks[:, [c for c in range(n)
                                          if tiers[c] == t]].mean()), 3)
+                if rounds else 0.0
                 for t in sorted(set(tiers))}
         return out
 

@@ -1,0 +1,46 @@
+"""Unified observability: one recorder, one record schema, three exporters.
+
+All four engines — `Trainer.run`, `Trainer.run_compiled`, `AsyncTrainer`,
+and `Population` — emit into a single host-side `Telemetry` recorder:
+per-round records (schema v1, folding the history-row metrics, metered
+bytes, and engine extras), labelled counters/gauges, and timeline spans
+(the async engine's *simulated* per-client compute / wire / retry /
+outage intervals, plus real host-side chunk build/execute phases on the
+compiled path).  Export as JSONL, Prometheus text, or Chrome trace-event
+JSON openable in Perfetto.
+
+Contract (rule T001 + ``tests/test_telemetry.py``): telemetry is
+observation-only — `NullTelemetry` is a near-zero-overhead no-op, an
+enabled recorder reuses the engines' existing post-chunk host mirrors
+(never a callback inside the donated ``lax.scan``), and every engine's
+params/history trajectory is bitwise-identical with telemetry on vs off.
+
+Quick start::
+
+    from repro.telemetry import Telemetry
+    tele = Telemetry()
+    trainer = Trainer(bundle, fsl, telemetry=tele)
+    state, history, meter = trainer.run_compiled(batch, rounds, key)
+    tele.export_jsonl("run.jsonl")      # one record per round + summary
+    tele.export_trace("run.trace.json")  # open in https://ui.perfetto.dev
+    print(tele.prometheus_text())
+
+CLI: ``repro.launch.train --telemetry run.jsonl --trace run.trace.json
+--prom run.prom`` (and ``--profile-dir`` for a real ``jax.profiler``
+device trace of the compiled path).
+"""
+from repro.telemetry.export import (chrome_trace, export_jsonl,
+                                    export_prometheus, export_trace,
+                                    prometheus_text)
+from repro.telemetry.record import (ENGINES, SCHEMA_VERSION,
+                                    make_round_record, make_summary_record,
+                                    validate_record)
+from repro.telemetry.recorder import (NULL_TELEMETRY, NullTelemetry, Span,
+                                      Telemetry, resolve_telemetry)
+
+__all__ = [
+    "ENGINES", "NULL_TELEMETRY", "NullTelemetry", "SCHEMA_VERSION", "Span",
+    "Telemetry", "chrome_trace", "export_jsonl", "export_prometheus",
+    "export_trace", "make_round_record", "make_summary_record",
+    "prometheus_text", "resolve_telemetry", "validate_record",
+]

@@ -15,6 +15,7 @@ from repro.analysis import (RULES, Violation, apply_waivers,
                             assert_x64_disabled, audit_chunk,
                             audit_faults, audit_framed_wire,
                             audit_kernels, audit_prng, audit_registry,
+                            audit_telemetry,
                             audit_wire_contracts, chunk_matrix,
                             donation_report, find_callbacks,
                             find_wide_dtypes, fingerprint, lint_source,
@@ -296,6 +297,58 @@ def test_fingerprint_is_structural():
 
 
 # ---------------------------------------------------------------------------
+# T001: telemetry neutrality
+# ---------------------------------------------------------------------------
+
+
+def test_seeded_t001_callback_in_telemetry_chunk(bundle):
+    """A telemetry implementation that reaches into the scan body (the
+    classic host-callback shortcut) must fire BOTH halves of the jaxpr
+    audit: the callback detector and the on/off fingerprint diff."""
+    from repro.analysis.contracts import harness_fsl
+
+    m = get_method("cse_fsl")
+    inner = m.make_chunk_step(harness_bundle(), harness_fsl("cse_fsl"))
+
+    def evil_chunk(state, batches, lrs):
+        jax.debug.print("round lr {r}", r=lrs[0])   # in-scan emission
+        return inner(state, batches, lrs)
+
+    vs = audit_telemetry(bundle=bundle, telemetry_chunk=evil_chunk)
+    assert _rules(vs) == ["T001", "T001"]
+    assert any("debug_callback" in v.message for v in vs)
+    assert any("changed the compiled program" in v.message for v in vs)
+    assert all("program=telemetry" in v.combo for v in vs)
+
+
+def test_seeded_t001_telemetry_in_traced_code():
+    """The AST half: method/kernel code may neither import the telemetry
+    package nor poke a ``.telemetry`` attribute — the same source is fine
+    in engine files (that is exactly where emission lives)."""
+    src = ("from repro.telemetry import Telemetry\n"
+           "def f(self, x):\n"
+           "    self.telemetry.counter('steps')\n"
+           "    return x\n")
+    vs = lint_source(src, "src/repro/core/methods/evil.py",
+                     traced_scope=True)
+    assert _rules(vs) == ["T001", "T001"]
+    assert {v.line for v in vs} == {1, 3}
+    assert lint_source(src, "src/repro/core/trainer.py",
+                       traced_scope=False) == []
+    # the dynamic-import escape hatch is closed too
+    vs = lint_source("import importlib\n"
+                     "t = importlib.import_module('repro.telemetry')\n",
+                     "src/repro/kernels/evil.py", traced_scope=True)
+    assert _rules(vs) == ["T001"] and vs[0].line == 2
+
+
+def test_t001_clean_on_real_tree(bundle):
+    """Both halves pass on the actual repo: the chunk programs are
+    telemetry-blind and no traced file touches the recorder."""
+    assert audit_telemetry(bundle=bundle, methods=("cse_fsl",)) == []
+
+
+# ---------------------------------------------------------------------------
 # A rules: AST / registry lint
 # ---------------------------------------------------------------------------
 
@@ -416,7 +469,8 @@ def test_waivers_mark_but_keep_violations():
 
 def test_rule_catalogue_covers_all_emitted_rules():
     assert set(RULES) == {"W001", "W002", "W003", "C001", "C002", "D001",
-                          "P001", "F001", "R001", "A001", "A002", "A003"}
+                          "P001", "F001", "R001", "T001", "A001", "A002",
+                          "A003"}
 
 
 def test_specs_equal_reports_first_mismatch():
@@ -442,6 +496,7 @@ def test_clean_tree_has_zero_violations(bundle):
     vs += audit_prng()
     vs += audit_faults()
     vs += audit_registry(bundle=bundle)
+    vs += audit_telemetry(bundle=bundle)
     vs += audit_kernels()
     for nm in available_methods():
         vs += audit_wire_contracts(nm, bundle=bundle)
